@@ -1,0 +1,65 @@
+"""Inject generated tables into EXPERIMENTS.md placeholders.
+
+    PYTHONPATH=src python -m benchmarks.fill_experiments
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.roofline_report import dryrun_table, load, roofline_table, summary
+
+
+def perf_log(path="results/perf.jsonl") -> str:
+    if not os.path.exists(path):
+        return "_(pending)_"
+    plans: dict[str, list] = {}
+    for line in open(path):
+        r = json.loads(line)
+        plans.setdefault(r["plan"], []).append(r)
+    out = []
+    for plan, steps in plans.items():
+        out.append(f"### {plan}\n")
+        out.append("| step | hypothesis | compute s | memory s | collective s | dominant | verdict |")
+        out.append("|---|---|---|---|---|---|---|")
+        prev = None
+        for r in steps:
+            rl = r["roofline"]
+            if prev is None:
+                verdict = "baseline"
+            else:
+                dom_prev = prev["dominant"]
+                ratio = rl[dom_prev] / max(prev[dom_prev], 1e-12)
+                verdict = (f"CONFIRMED: {dom_prev.replace('_s','')} x{ratio:.2f}"
+                           if ratio < 0.95 else
+                           (f"neutral ({dom_prev.replace('_s','')} x{ratio:.2f})"
+                            if ratio < 1.05 else
+                            f"REFUTED: {dom_prev.replace('_s','')} x{ratio:.2f}"))
+            out.append(
+                f"| {r['step']} | {r['hypothesis'][:80]} | {rl['compute_s']:.3f} "
+                f"| {rl['memory_s']:.3f} | {rl['collective_s']:.3f} "
+                f"| {rl['dominant'].replace('_s','')} | {verdict} |")
+            prev = rl
+        base, last = steps[0]["roofline"], steps[-1]["roofline"]
+        dom0 = base["dominant"]
+        out.append(
+            f"\n**Net**: dominant term ({dom0.replace('_s','')}) "
+            f"{base[dom0]:.3f}s → {last[dom0]:.3f}s "
+            f"({base[dom0]/max(last[dom0],1e-12):.2f}x better); "
+            f"bottleneck now: {last['dominant'].replace('_s','')}.\n")
+    return "\n".join(out)
+
+
+def main():
+    recs = load("results/dryrun.jsonl")
+    text = open("EXPERIMENTS.md").read()
+    text = text.replace("<!-- DRYRUN_TABLE -->",
+                        summary(recs) + "\n\n" + dryrun_table(recs))
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roofline_table(recs, "pod1"))
+    text = text.replace("<!-- PERF_LOG -->", perf_log())
+    open("EXPERIMENTS.md", "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

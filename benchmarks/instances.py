@@ -1,0 +1,41 @@
+"""Benchmark instances: the paper's families (Table 1), container-scaled.
+
+Sizes are configurable; defaults keep the full suite minutes-scale on one
+CPU core. ``--scale paper`` in run.py lifts them toward the paper's sizes.
+"""
+from __future__ import annotations
+
+from repro.core import graph as G
+from repro.core.hierarchy import Hierarchy
+
+# name -> (generator, default n)
+SMALL = {
+    "rgg_s": (lambda n, s: G.gen_rgg(n, seed=s), 4000),        # cf. rgg23/24
+    "grid_s": (lambda n, s: G.gen_grid(int(n ** 0.5)), 4096),  # cf. del23/24
+    "road_s": (lambda n, s: G.gen_road(n, seed=s), 4096),      # cf. eur/deu
+    "kron_s": (lambda n, s: G.gen_kron(11, seed=s), 2048),     # complex nets
+}
+
+LARGE = {
+    "rgg_l": (lambda n, s: G.gen_rgg(n, seed=s), 30_000),
+    "grid_l": (lambda n, s: G.gen_grid(int(n ** 0.5)), 36_864),
+    "road_l": (lambda n, s: G.gen_road(n, seed=s), 36_864),
+}
+
+
+def instances(scale: str = "small"):
+    table = dict(SMALL)
+    if scale in ("large", "paper"):
+        table.update(LARGE)
+    mult = 8 if scale == "paper" else 1
+    for name, (gen, n) in table.items():
+        yield name, gen(n * mult, 0)
+
+
+# the paper's experimental hierarchy family: H = 4:8:{1..6}, D = 1:10:100
+def paper_hierarchies(max_c: int = 3):
+    for c in range(1, max_c + 1):
+        if c == 1:
+            yield Hierarchy(a=(4, 8), d=(1.0, 10.0))
+        else:
+            yield Hierarchy(a=(4, 8, c), d=(1.0, 10.0, 100.0))

@@ -1,0 +1,5 @@
+"""SharedMap core: the paper's contribution (hierarchical multisection
+process mapping) and its substrate (multilevel graph partitioner), in JAX."""
+from .api import SharedMapConfig, SharedMapResult, shared_map  # noqa: F401
+from .graph import Graph, from_edges  # noqa: F401
+from .hierarchy import Hierarchy, adaptive_epsilon, pe_distance  # noqa: F401

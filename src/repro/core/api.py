@@ -1,0 +1,54 @@
+"""SharedMap public API.
+
+>>> from repro.core.api import shared_map, SharedMapConfig
+>>> res = shared_map(graph, hierarchy)          # the paper's algorithm
+>>> res.pe_of                                    # vertex -> PE mapping
+>>> res.J                                        # communication cost
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .graph import Graph
+from .hierarchy import Hierarchy
+from .mapping import evaluate_J
+from .multisection import hierarchical_multisection
+
+
+@dataclasses.dataclass(frozen=True)
+class SharedMapConfig:
+    eps: float = 0.03
+    preset: str = "eco"          # fast | eco | strong
+    strategy: str = "bucket"     # naive | layer | bucket | queue
+    seed: int = 0
+    adaptive: bool = True        # Lemma 5.1 adaptive imbalance
+    refine_mapping: bool = False  # optional block<->PE swap pass. The paper's
+    # SharedMap deliberately has none (§6.4) — with a KaFFPa-strength
+    # partitioner it is unnecessary. Our JAX substrate partitioner is weaker,
+    # so this evens the comparison against GM (which does refine); see
+    # DESIGN.md §2.3.
+
+
+@dataclasses.dataclass
+class SharedMapResult:
+    pe_of: np.ndarray
+    J: float
+    stats: dict
+
+
+def shared_map(g: Graph, h: Hierarchy, config: SharedMapConfig | None = None) -> SharedMapResult:
+    """Solve GPMP for communication graph ``g`` on hierarchy ``h``."""
+    cfg = config or SharedMapConfig()
+    res = hierarchical_multisection(
+        g, h, eps=cfg.eps, preset=cfg.preset, strategy=cfg.strategy,
+        seed=cfg.seed, adaptive=cfg.adaptive,
+    )
+    if cfg.refine_mapping:
+        from .mapping import quotient_matrix, swap_refine
+        C = quotient_matrix(g, res.pe_of, h.k)
+        perm = swap_refine(C, h, np.arange(h.k, dtype=np.int64), seed=cfg.seed)
+        res.pe_of = perm[res.pe_of]
+        res.stats["refined"] = True
+    return SharedMapResult(pe_of=res.pe_of, J=evaluate_J(g, h, res.pe_of), stats=res.stats)

@@ -1,0 +1,132 @@
+"""Coarsening: heavy-edge matching (HEM) + contraction, fully vectorized.
+
+Matching uses two-round handshaking: every unmatched vertex proposes to its
+heaviest unmatched neighbour (deterministic jittered tie-breaks); mutual
+proposals are contracted. This is the standard shared-memory parallel HEM
+(cf. Mt-Metis / Mt-KaHyPar coarsening) re-expressed over static-shape CSR
+arrays so it vmaps across subgraphs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph, edge_mask, vertex_mask
+
+_HASH_A = jnp.uint32(2654435761)
+_HASH_B = jnp.uint32(40503)
+
+
+def _edge_jitter(rows: jax.Array, cols: jax.Array, salt: int) -> jax.Array:
+    """Deterministic per-edge jitter in [0, 1), symmetric in (u, v)."""
+    u = rows.astype(jnp.uint32)
+    v = cols.astype(jnp.uint32)
+    a, b = jnp.minimum(u, v), jnp.maximum(u, v)
+    h = (a * _HASH_A) ^ (b * _HASH_B) ^ jnp.uint32((salt * 0x9E3779B9) & 0xFFFFFFFF)
+    h = (h ^ (h >> 16)) * jnp.uint32(0x45D9F3B)
+    return (h & jnp.uint32(0xFFFFFF)).astype(jnp.float32) / float(1 << 24)
+
+
+def hem_match(g: Graph, rounds: int = 3, salt: int = 0) -> jax.Array:
+    """Heavy-edge matching. Returns cluster labels [N]: matched pairs share
+    the smaller endpoint's id; unmatched vertices point to themselves."""
+    N = g.N
+    vmask = vertex_mask(g)
+    emask = edge_mask(g)
+    idx = jnp.arange(N, dtype=jnp.int32)
+    labels = idx
+    matched = ~vmask  # padding can never match
+
+    def one_round(r, state):
+        labels, matched = state
+        free_edge = emask & ~matched[g.rows] & ~matched[g.cols] & (g.rows != g.cols)
+        jit_ = _edge_jitter(g.rows, g.cols, salt * 7 + 13) * 1e-3
+        score = jnp.where(free_edge, g.ewgt * (1.0 + jit_) + jit_, -jnp.inf)
+        row_best = jax.ops.segment_max(score, g.rows, num_segments=N)
+        is_best = free_edge & (score >= row_best[g.rows]) & jnp.isfinite(score)
+        # tie-break: smallest column among best-scoring edges
+        prop_col = jax.ops.segment_min(
+            jnp.where(is_best, g.cols, N), g.rows, num_segments=N
+        )
+        proposal = jnp.where((prop_col < N) & ~matched, prop_col, idx)
+        # mutual handshake
+        mutual = (proposal != idx) & (proposal[proposal] == idx)
+        leader = jnp.minimum(idx, proposal)
+        new_match = mutual & ~matched
+        labels = jnp.where(new_match, leader, labels)
+        matched = matched | new_match
+        return labels, matched
+
+    labels, matched = jax.lax.fori_loop(0, rounds, one_round, (labels, matched))
+    return labels
+
+
+@functools.partial(jax.jit, donate_argnums=())
+def contract(g: Graph, labels: jax.Array) -> tuple[Graph, jax.Array]:
+    """Contract clusters given by ``labels``. Returns (coarse graph with the
+    SAME padded shapes, fine->coarse vertex map [N])."""
+    N, M = g.N, g.M
+    vmask = vertex_mask(g)
+    emask = edge_mask(g)
+    idx = jnp.arange(N, dtype=jnp.int32)
+
+    is_leader = vmask & (labels == idx)
+    rank = jnp.cumsum(is_leader.astype(jnp.int32)) - 1  # [N]
+    n_coarse = jnp.sum(is_leader.astype(jnp.int32))
+    # fine -> coarse id; padding parked at N-1 with zero weight
+    newid = jnp.where(vmask, rank[labels], N - 1).astype(jnp.int32)
+
+    vwgt_c = jax.ops.segment_sum(jnp.where(vmask, g.vwgt, 0.0), newid, num_segments=N)
+
+    cu = newid[g.rows]
+    cv = newid[g.cols]
+    valid = emask & (cu != cv)
+    # sort edges by (cu, cv) with invalid parked at cu = N (dropped on scatter)
+    cu_s_key = jnp.where(valid, cu, N)
+    order1 = jnp.argsort(jnp.where(valid, cv, N), stable=True)
+    cu1, cv1, w1 = cu_s_key[order1], cv[order1], jnp.where(valid, g.ewgt, 0.0)[order1]
+    order2 = jnp.argsort(cu1, stable=True)
+    cu2, cv2, w2 = cu1[order2], cv1[order2], w1[order2]
+
+    valid_s = cu2 < N
+    head = valid_s & (
+        (jnp.arange(M) == 0)
+        | (cu2 != jnp.roll(cu2, 1))
+        | (cv2 != jnp.roll(cv2, 1))
+    )
+    seg = jnp.cumsum(head.astype(jnp.int32)) - 1  # dedup segment id per slot
+    agg_w = jax.ops.segment_sum(jnp.where(valid_s, w2, 0.0), jnp.maximum(seg, 0), num_segments=M)
+
+    slot = jnp.where(head, seg, M)  # scatter position (M = drop)
+    rows_c = jnp.full((M,), N - 1, jnp.int32).at[slot].set(cu2, mode="drop")
+    cols_c = jnp.full((M,), N - 1, jnp.int32).at[slot].set(cv2, mode="drop")
+    m_coarse = jnp.sum(head.astype(jnp.int32))
+    in_range = jnp.arange(M) < m_coarse
+    ewgt_c = jnp.where(in_range, agg_w, 0.0)
+    rows_c = jnp.where(in_range, rows_c, N - 1)
+    cols_c = jnp.where(in_range, cols_c, N - 1)
+
+    counts = jax.ops.segment_sum(in_range.astype(jnp.int32), rows_c, num_segments=N)
+    # padding rows (slots >= m) accumulate into N-1; subtract them
+    pad_at_anchor = jnp.sum((~in_range).astype(jnp.int32))
+    counts = counts.at[N - 1].add(-pad_at_anchor)
+    indptr_c = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)]).astype(jnp.int32)
+
+    gc = Graph(
+        vwgt=vwgt_c,
+        rows=rows_c,
+        cols=cols_c,
+        ewgt=ewgt_c,
+        indptr=indptr_c,
+        n=n_coarse.astype(jnp.int32),
+        m=m_coarse.astype(jnp.int32),
+    )
+    return gc, newid
+
+
+def coarsen_once(g: Graph, salt: int = 0, rounds: int = 3) -> tuple[Graph, jax.Array]:
+    """One HEM + contraction level."""
+    labels = hem_match(g, rounds=rounds, salt=salt)
+    return contract(g, labels)

@@ -1,0 +1,277 @@
+"""Graph substrate: static-shape CSR graphs as JAX pytrees.
+
+All partitioning kernels operate on `Graph`, a padded CSR representation
+with static array shapes so that the same jitted program serves every
+subgraph of a hierarchy level (the LAYER/BUCKET scheduling strategies vmap
+over stacked `Graph`s).
+
+Conventions
+-----------
+* Vertices ``0 .. n-1`` are real, ``n .. N-1`` are padding (weight 0).
+* Every undirected edge {u, v} is stored twice (u->v and v->u).
+* Edge slots ``m .. M-1`` are padding: ``rows == cols == n_pad_anchor`` and
+  ``ewgt == 0`` so they are harmless under segment reductions.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class Graph(NamedTuple):
+    """Padded CSR graph (pytree; all fields are arrays for vmap-ability)."""
+
+    vwgt: jax.Array    # [N]   f32 vertex weights (0 on padding)
+    rows: jax.Array    # [M]   i32 source vertex of each directed edge
+    cols: jax.Array    # [M]   i32 target vertex of each directed edge
+    ewgt: jax.Array    # [M]   f32 edge weights (0 on padding)
+    indptr: jax.Array  # [N+1] i32 CSR row pointers over the padded arrays
+    n: jax.Array       # []    i32 number of real vertices
+    m: jax.Array       # []    i32 number of real directed edges
+
+    @property
+    def N(self) -> int:
+        return self.vwgt.shape[0]
+
+    @property
+    def M(self) -> int:
+        return self.rows.shape[0]
+
+    def total_weight(self) -> jax.Array:
+        return jnp.sum(self.vwgt)
+
+
+def from_edges(
+    n: int,
+    u: np.ndarray,
+    v: np.ndarray,
+    w: np.ndarray | None = None,
+    vwgt: np.ndarray | None = None,
+    N: int | None = None,
+    M: int | None = None,
+) -> Graph:
+    """Build a padded CSR `Graph` from an undirected edge list (host-side).
+
+    ``u, v`` are endpoints of undirected edges (each listed once); weights
+    default to 1. ``N``/``M`` give the padded sizes (default: exact fit).
+    """
+    u = np.asarray(u, np.int64)
+    v = np.asarray(v, np.int64)
+    keep = u != v  # drop self loops
+    u, v = u[keep], v[keep]
+    w = np.ones(u.shape[0], np.float64) if w is None else np.asarray(w, np.float64)[keep]
+    vwgt_np = np.ones(n, np.float64) if vwgt is None else np.asarray(vwgt, np.float64)
+
+    du = np.concatenate([u, v])
+    dv = np.concatenate([v, u])
+    dw = np.concatenate([w, w])
+    m = du.shape[0]
+
+    N = int(N if N is not None else n)
+    M = int(M if M is not None else max(m, 1))
+    if N < n or M < m:
+        raise ValueError(f"padding too small: N={N}<{n} or M={M}<{m}")
+
+    order = np.argsort(du, kind="stable")
+    du, dv, dw = du[order], dv[order], dw[order]
+
+    rows = np.full(M, N - 1, np.int32)
+    cols = np.full(M, N - 1, np.int32)
+    ewgt = np.zeros(M, np.float64)
+    rows[:m] = du
+    cols[:m] = dv
+    ewgt[:m] = dw
+
+    counts = np.bincount(du, minlength=N).astype(np.int64)
+    indptr = np.zeros(N + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    # padding rows all point at the tail
+    indptr = np.minimum(indptr, m)
+    indptr[-1] = m  # real edges end at m; padded edge slots live beyond
+
+    vw = np.zeros(N, np.float64)
+    vw[:n] = vwgt_np
+
+    return Graph(
+        vwgt=jnp.asarray(vw, jnp.float32),
+        rows=jnp.asarray(rows, jnp.int32),
+        cols=jnp.asarray(cols, jnp.int32),
+        ewgt=jnp.asarray(ewgt, jnp.float32),
+        indptr=jnp.asarray(indptr, jnp.int32),
+        n=jnp.asarray(n, jnp.int32),
+        m=jnp.asarray(m, jnp.int32),
+    )
+
+
+def edge_mask(g: Graph) -> jax.Array:
+    """[M] bool — True on real (non-padding) edge slots."""
+    return jnp.arange(g.M) < g.m
+
+
+def vertex_mask(g: Graph) -> jax.Array:
+    """[N] bool — True on real vertices."""
+    return jnp.arange(g.N) < g.n
+
+
+def degrees(g: Graph) -> jax.Array:
+    return g.indptr[1:] - g.indptr[:-1]
+
+
+def edge_cut(g: Graph, part: jax.Array) -> jax.Array:
+    """Total weight of cut edges (each undirected edge counted once)."""
+    cut = (part[g.rows] != part[g.cols]) & edge_mask(g)
+    return jnp.sum(jnp.where(cut, g.ewgt, 0.0)) / 2.0
+
+
+def block_weights(g: Graph, part: jax.Array, k: int) -> jax.Array:
+    """[k] f32 — total vertex weight per block (padding contributes 0)."""
+    safe = jnp.where(vertex_mask(g), part, 0)
+    return jax.ops.segment_sum(g.vwgt, safe, num_segments=k)
+
+
+# ---------------------------------------------------------------------------
+# Synthetic instance generators (the paper's benchmark families, downscaled).
+# All host-side numpy, seeded, deterministic.
+# ---------------------------------------------------------------------------
+
+def gen_rgg(n: int, seed: int = 0, radius_scale: float = 0.55) -> Graph:
+    """Random geometric graph in the unit square (paper: rgg23/rgg24)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    r = radius_scale * np.sqrt(np.log(max(n, 2)) / n)
+    # grid bucketing for near-linear neighbour search
+    nb = max(1, int(1.0 / r))
+    cell = (pts / (1.0 / nb)).astype(np.int64)
+    cell_id = cell[:, 0] * nb + cell[:, 1]
+    order = np.argsort(cell_id, kind="stable")
+    us, vs = [], []
+    starts = {}
+    sorted_ids = cell_id[order]
+    uniq, first = np.unique(sorted_ids, return_index=True)
+    for cid, fi in zip(uniq, first):
+        starts[int(cid)] = int(fi)
+    bounds = dict(zip(uniq.tolist(), np.append(first[1:], n).tolist()))
+    for cx in range(nb):
+        for cy in range(nb):
+            cid = cx * nb + cy
+            if cid not in starts:
+                continue
+            a = order[starts[cid]:bounds[cid]]
+            cand = [a]
+            for dx, dy in ((0, 1), (1, -1), (1, 0), (1, 1)):
+                nc = (cx + dx) * nb + (cy + dy)
+                if 0 <= cx + dx < nb and 0 <= cy + dy < nb and nc in starts:
+                    cand.append(order[starts[nc]:bounds[nc]])
+            b = np.concatenate(cand)
+            d2 = ((pts[a, None, :] - pts[None, b, :]) ** 2).sum(-1)
+            ii, jj = np.nonzero(d2 <= r * r)
+            uu, vv = a[ii], b[jj]
+            keep = uu < vv
+            us.append(uu[keep])
+            vs.append(vv[keep])
+    u = np.concatenate(us) if us else np.zeros(0, np.int64)
+    v = np.concatenate(vs) if vs else np.zeros(0, np.int64)
+    return from_edges(n, u, v)
+
+
+def gen_grid(side: int, diag: bool = True) -> Graph:
+    """Triangulated grid — a Delaunay-triangulation stand-in (del23/del24)."""
+    n = side * side
+    idx = np.arange(n).reshape(side, side)
+    us = [idx[:, :-1].ravel(), idx[:-1, :].ravel()]
+    vs = [idx[:, 1:].ravel(), idx[1:, :].ravel()]
+    if diag:
+        us.append(idx[:-1, :-1].ravel())
+        vs.append(idx[1:, 1:].ravel())
+    return from_edges(n, np.concatenate(us), np.concatenate(vs))
+
+
+def gen_road(n: int, seed: int = 0) -> Graph:
+    """Road-network-like graph (paper: eur/deu): sparse, low degree, long
+    paths — a perturbed grid with random shortcuts removed/added."""
+    side = int(np.sqrt(n))
+    n = side * side
+    rng = np.random.default_rng(seed)
+    idx = np.arange(n).reshape(side, side)
+    u = np.concatenate([idx[:, :-1].ravel(), idx[:-1, :].ravel()])
+    v = np.concatenate([idx[:, 1:].ravel(), idx[1:, :].ravel()])
+    keep = rng.random(u.shape[0]) > 0.1  # drop 10% of edges -> irregularity
+    u, v = u[keep], v[keep]
+    ns = n // 50  # sparse shortcuts
+    su = rng.integers(0, n, ns)
+    sv = np.minimum(su + rng.integers(1, side, ns), n - 1)
+    return from_edges(n, np.concatenate([u, su]), np.concatenate([v, sv]))
+
+
+def gen_kron(scale: int, edge_factor: int = 8, seed: int = 0) -> Graph:
+    """Kronecker-style power-law graph (complex-network instance family)."""
+    n = 1 << scale
+    m = n * edge_factor
+    rng = np.random.default_rng(seed)
+    A, B, C = 0.57, 0.19, 0.19
+    u = np.zeros(m, np.int64)
+    v = np.zeros(m, np.int64)
+    for bit in range(scale):
+        r1 = rng.random(m)
+        r2 = rng.random(m)
+        ubit = (r1 > A + B).astype(np.int64)
+        vbit = np.where(ubit == 0, (r1 > A).astype(np.int64), (r2 > C / (C + (1 - A - B - C))).astype(np.int64))
+        u |= ubit << bit
+        v |= vbit << bit
+    keep = u != v
+    return from_edges(n, u[keep], v[keep])
+
+
+GENERATORS = {
+    "rgg": gen_rgg,
+    "grid": lambda n, seed=0: gen_grid(int(np.sqrt(n))),
+    "road": gen_road,
+    "kron": lambda n, seed=0: gen_kron(max(int(np.log2(max(n, 2))), 4), seed=seed),
+}
+
+
+def pad_graph(g: Graph, N: int, M: int) -> Graph:
+    """Host-side re-pad to (N, M) >= current real sizes."""
+    n = int(g.n)
+    m = int(g.m)
+    if N < n or M < m:
+        raise ValueError("pad_graph target smaller than real size")
+    vwgt = np.zeros(N, np.float32)
+    vwgt[: g.N][: min(g.N, N)] = np.asarray(g.vwgt)[: min(g.N, N)]
+    rows = np.full(M, N - 1, np.int32)
+    cols = np.full(M, N - 1, np.int32)
+    ewgt = np.zeros(M, np.float32)
+    rows[:m] = np.asarray(g.rows)[:m]
+    cols[:m] = np.asarray(g.cols)[:m]
+    ewgt[:m] = np.asarray(g.ewgt)[:m]
+    indptr_old = np.asarray(g.indptr)
+    indptr = np.zeros(N + 1, np.int32)
+    indptr[: min(g.N + 1, N + 1)] = indptr_old[: min(g.N + 1, N + 1)]
+    indptr[min(g.N + 1, N + 1):] = m
+    return Graph(
+        vwgt=jnp.asarray(vwgt),
+        rows=jnp.asarray(rows),
+        cols=jnp.asarray(cols),
+        ewgt=jnp.asarray(ewgt),
+        indptr=jnp.asarray(indptr),
+        n=jnp.asarray(n, jnp.int32),
+        m=jnp.asarray(m, jnp.int32),
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("num_blocks",))
+def quotient_graph_arrays(g: Graph, part: jax.Array, num_blocks: int):
+    """Dense quotient adjacency [k,k] + block weights [k] (for small k)."""
+    k = num_blocks
+    mask = edge_mask(g)
+    pu = jnp.where(mask, part[g.rows], 0)
+    pv = jnp.where(mask, part[g.cols], 0)
+    w = jnp.where(mask & (pu != pv), g.ewgt, 0.0)
+    flat = pu * k + pv
+    adj = jax.ops.segment_sum(w, flat, num_segments=k * k).reshape(k, k) / 1.0
+    bw = block_weights(g, part, k)
+    return adj, bw

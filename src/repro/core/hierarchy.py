@@ -1,0 +1,140 @@
+"""Hardware hierarchy: H = a_1 : ... : a_l, D = d_1 : ... : d_l.
+
+Implements the mixed-radix *bit-label* PE-distance trick (O(1) distance
+queries, cf. ParHipMap) and the paper's adaptive imbalance (Lemma 5.1).
+
+Convention (matches the paper): ``a_1`` is the innermost level (PEs per
+processor) and ``a_l`` the outermost (islands). A PE id is the mixed-radix
+number ``pe = digit_l * (a_{l-1}*...*a_1) + ... + digit_2 * a_1 + digit_1``
+— i.e. the most significant digit is the island. The hierarchical
+multisection partitions top-down: first into ``a_l`` blocks, then ``a_{l-1}``
+and so on, so block indices concatenate to exactly this mixed-radix id
+(identity mapping).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Hierarchy:
+    a: tuple[int, ...]  # a_1 .. a_l  (innermost first)
+    d: tuple[float, ...]  # d_1 .. d_l (distance when highest differing level is i)
+
+    def __post_init__(self):
+        if len(self.a) != len(self.d):
+            raise ValueError("H and D must have equal length")
+        if any(x < 1 for x in self.a):
+            raise ValueError("hierarchy factors must be >= 1")
+
+    @property
+    def l(self) -> int:
+        return len(self.a)
+
+    @property
+    def k(self) -> int:
+        return math.prod(self.a)
+
+    # strides[i] = number of PEs inside one level-i group = a_1*...*a_i
+    @property
+    def strides(self) -> tuple[int, ...]:
+        out = []
+        acc = 1
+        for ai in self.a:
+            acc *= ai
+            out.append(acc)
+        return tuple(out)
+
+    def digits(self, pe: np.ndarray) -> np.ndarray:
+        """Mixed-radix digits of PE ids, innermost first: [*, l]."""
+        pe = np.asarray(pe)
+        out = np.zeros(pe.shape + (self.l,), np.int64)
+        rest = pe.copy()
+        for i, ai in enumerate(self.a):
+            out[..., i] = rest % ai
+            rest //= ai
+        return out
+
+    def distance_table(self) -> np.ndarray:
+        """[k, k] distance matrix D (for tests/small k)."""
+        k = self.k
+        pes = np.arange(k)
+        dig = self.digits(pes)  # [k, l]
+        diff = dig[:, None, :] != dig[None, :, :]  # [k,k,l]
+        lvl = np.where(diff.any(-1), self.l - 1 - np.argmax(diff[:, :, ::-1], axis=-1), -1)
+        dist = np.zeros((k, k))
+        dvec = np.asarray(self.d)
+        dist = np.where(lvl >= 0, dvec[np.clip(lvl, 0, self.l - 1)], 0.0)
+        return dist
+
+    def __str__(self):
+        return "H=" + ":".join(map(str, self.a)) + " D=" + ":".join(f"{x:g}" for x in self.d)
+
+
+def pe_distance(h: Hierarchy, x: jax.Array, y: jax.Array) -> jax.Array:
+    """Vectorized O(1) PE distance (mixed-radix bit-label trick).
+
+    Group sizes below each level: g_0=1, g_1=a_1, g_2=a_1*a_2, ...
+    x and y share the level-j group iff ``x // g_j == y // g_j``; the
+    distance is ``d_i`` with ``i = min{ j : x//g_j == y//g_j }`` (0 if x==y).
+    ``x//g_j != y//g_j`` is monotone decreasing in j, so ``i`` equals the
+    count of differing group levels.
+    """
+    g_below = jnp.asarray((1,) + h.strides[:-1], jnp.int32)  # [l]
+    dvec = jnp.asarray(h.d, jnp.float32)                     # [l]
+    diff = (x[..., None] // g_below) != (y[..., None] // g_below)  # [*, l]
+    lvl = jnp.sum(diff.astype(jnp.int32), axis=-1)  # 0 (equal) .. l
+    safe = jnp.clip(lvl - 1, 0, len(h.d) - 1)
+    return jnp.where(lvl > 0, dvec[safe], 0.0)
+
+
+def mapping_cost(h: Hierarchy, rows: jax.Array, cols: jax.Array,
+                 ewgt: jax.Array, pe_of: jax.Array, emask: jax.Array) -> jax.Array:
+    """J(C, D, Pi) = sum over undirected edges of w * dist(pe_u, pe_v).
+
+    ``rows/cols/ewgt`` are the directed CSR arrays (each undirected edge
+    twice) so the sum is halved.
+    """
+    pu = pe_of[rows]
+    pv = pe_of[cols]
+    d = pe_distance(h, pu, pv)
+    return jnp.sum(jnp.where(emask, ewgt * d, 0.0)) / 2.0
+
+
+def adaptive_epsilon(eps: float, total_weight: float, sub_weight: float,
+                     k: int, k_sub: int, depth: int) -> float:
+    """Lemma 5.1: eps' = ((1+eps) * k' c(V) / (k c(V')))^(1/d) - 1.
+
+    ``k_sub`` = number of final PEs below this subgraph (= a_1*...*a_d),
+    ``depth``  = d (levels still to partition below/including this one).
+    Clamped at >= 0 (a subgraph already over its share gets zero slack).
+    """
+    if depth <= 0:
+        return eps
+    ratio = (1.0 + eps) * (k_sub * total_weight) / (k * max(sub_weight, 1e-12))
+    return max(ratio ** (1.0 / depth) - 1.0, 0.0)
+
+
+def parse_hierarchy(hs: str, ds: str) -> Hierarchy:
+    """Parse 'a1:a2:a3' / 'd1:d2:d3' strings (paper notation)."""
+    a = tuple(int(x) for x in hs.split(":"))
+    d = tuple(float(x) for x in ds.split(":"))
+    return Hierarchy(a=a, d=d)
+
+
+def tpu_v5e_hierarchy(multi_pod: bool = False) -> Hierarchy:
+    """The production meshes of this repo as process-mapping hierarchies.
+
+    Single pod : 16 chips/rack x 16 racks      -> H = 16:16,   D = 1:10
+    Multi pod  : ... x 2 pods (DCN)            -> H = 16:16:2, D = 1:10:100
+    (innermost-first, per paper convention).
+    """
+    if multi_pod:
+        return Hierarchy(a=(16, 16, 2), d=(1.0, 10.0, 100.0))
+    return Hierarchy(a=(16, 16), d=(1.0, 10.0))

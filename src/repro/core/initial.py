@@ -1,0 +1,88 @@
+"""Initial partition of the coarsest graph: greedy graph growing + LP polish.
+
+Seeds are index-strided (generators and contraction preserve locality in id
+order), then blocks grow by repeatedly admitting the unassigned vertices
+with the strongest connectivity to each block, under capacity caps. Any
+leftover (disconnected) vertices fall to the lightest block, then a
+rebalanced LP pass polishes the result. Deterministic given ``salt``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph, block_weights, edge_mask, vertex_mask
+from .refine import _vhash, lp_refine, rebalance
+
+
+@functools.partial(jax.jit, static_argnames=("k", "grow_rounds", "polish_rounds"))
+def initial_partition(
+    g: Graph,
+    k: int,
+    Lmax: jax.Array,
+    salt: int = 0,
+    grow_rounds: int = 24,
+    polish_rounds: int = 6,
+) -> jax.Array:
+    N = g.N
+    idx = jnp.arange(N, dtype=jnp.int32)
+    vmask = vertex_mask(g)
+    emask = edge_mask(g)
+    n = jnp.maximum(g.n, 1)
+
+    # --- seeds: k index-strided real vertices, hash-rotated by salt --------
+    offset = (_vhash(1, salt)[0] % jnp.uint32(97)).astype(jnp.int32)
+    seed_pos = ((jnp.arange(k, dtype=jnp.int32) * n) // k + offset) % n
+    part = jnp.full((N,), k, jnp.int32)  # k == "unassigned"
+    part = part.at[seed_pos].set(jnp.arange(k, dtype=jnp.int32))
+    part = jnp.where(vmask, part, k)
+
+    # --- greedy growth ------------------------------------------------------
+    def grow(r, part):
+        assigned = part < k
+        pcols = jnp.where(emask & assigned[g.cols], part[g.cols], k)
+        flat = g.rows * (k + 1) + pcols
+        w = jnp.where(emask, g.ewgt, 0.0)
+        conn = jax.ops.segment_sum(w, flat, num_segments=g.N * (k + 1)).reshape(g.N, k + 1)[:, :k]
+        W = jax.ops.segment_sum(jnp.where(assigned & vmask, g.vwgt, 0.0), jnp.where(assigned, part, 0), num_segments=k)
+        fits = (W[None, :] + g.vwgt[:, None]) <= Lmax
+        score = jnp.where(fits, conn, -jnp.inf)
+        best = jnp.argmax(score, axis=1).astype(jnp.int32)
+        sbest = jnp.max(score, axis=1)
+        cand = vmask & ~assigned & (sbest > 0.0)
+        # capacity prefix per target block (strongest connections first)
+        order = jnp.argsort(jnp.where(cand, -sbest, jnp.inf), stable=True)
+        tgt_s = best[order]
+        cand_s = cand[order]
+        w_s = jnp.where(cand_s, g.vwgt[order], 0.0)
+        inflow = jnp.cumsum(jax.nn.one_hot(tgt_s, k, dtype=jnp.float32) * w_s[:, None], axis=0)
+        ok_s = cand_s & (jnp.take_along_axis(inflow, tgt_s[:, None], axis=1)[:, 0] <= jnp.maximum(Lmax - W, 0.0)[tgt_s])
+        accept = jnp.zeros((N,), bool).at[order].set(ok_s)
+        return jnp.where(accept, best, part)
+
+    part = jax.lax.fori_loop(0, grow_rounds, grow, part)
+
+    # --- leftovers -> lightest block with room ------------------------------
+    def sweep_leftovers(part):
+        assigned = part < k
+        W = jax.ops.segment_sum(jnp.where(assigned & vmask, g.vwgt, 0.0), jnp.where(assigned, part, 0), num_segments=k)
+        lightest = jnp.argmin(W).astype(jnp.int32)
+        todo = vmask & ~assigned
+        # admit unassigned in index order until Lmax (approximate: cumsum cap)
+        w_cum = jnp.cumsum(jnp.where(todo, g.vwgt, 0.0))
+        ok = todo & ((W[lightest] + w_cum) <= jnp.maximum(Lmax, W[lightest] + g.vwgt))
+        return jnp.where(ok, lightest, part)
+
+    # a few sweeps (each fills the currently-lightest block)
+    part = jax.lax.fori_loop(0, 8, lambda i, p: sweep_leftovers(p), part)
+    # anything still left: round-robin by hash (guaranteed assignment)
+    left = vmask & (part >= k)
+    fallback = (_vhash(N, salt + 5) % jnp.uint32(k)).astype(jnp.int32)
+    part = jnp.where(left, fallback, part)
+    part = jnp.where(vmask, part, 0)
+
+    part = lp_refine(g, part, k, Lmax, rounds=polish_rounds, salt=salt + 11)
+    part = rebalance(g, part, k, Lmax, rounds=6, salt=salt + 17)
+    return part

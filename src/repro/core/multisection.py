@@ -1,0 +1,329 @@
+"""Hierarchical multisection (the paper's §4) with scheduling strategies.
+
+The communication graph is partitioned along the hierarchy
+``H = a_1 : ... : a_l`` (top-down: first a_l, then a_{l-1}, ...), with the
+adaptive imbalance of Lemma 5.1 applied at every sub-partition, so the final
+k-way partition is eps-balanced and the identity mapping solves the mapping
+phase.
+
+Scheduling strategies (§4.2-4.5), adapted from C++ threads to JAX/XLA:
+
+* ``naive``   — partition one subgraph at a time (all compute on one task).
+* ``layer``   — all subgraphs of one hierarchy level padded to a common
+                shape and partitioned by ONE vmapped program (the level
+                barrier is the program boundary). Paper: Algorithm 1.
+* ``bucket``  — the NON-BLOCKING LAYER analogue: subgraphs of a level are
+                grouped into power-of-two size buckets; each bucket is its
+                own vmapped program, so small subgraphs do not pay the
+                padding (idle-lane) cost of the largest one.
+* ``queue``   — the PRIORITY QUEUE analogue: a host-side master thread pops
+                the largest pending subgraph and dispatches its partition
+                call to a worker pool (XLA dispatch is asynchronous).
+                Paper: Algorithm 2.
+
+All strategies use salts derived from the subgraph's position in the
+hierarchy (not traversal order), so results are reproducible per strategy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import threading
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+from .hierarchy import Hierarchy, adaptive_epsilon
+from .partition import num_levels, partition
+
+
+# ---------------------------------------------------------------------------
+# host-side subgraph extraction
+# ---------------------------------------------------------------------------
+
+def _next_pow2(x: int) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(x, 1)))), 0)
+
+
+@dataclasses.dataclass
+class _HostGraph:
+    """Numpy mirror of a (sub)graph + bookkeeping for the recursion."""
+
+    vwgt: np.ndarray   # [n]
+    rows: np.ndarray   # [m] directed
+    cols: np.ndarray   # [m]
+    ewgt: np.ndarray   # [m]
+    orig_ids: np.ndarray  # [n] vertex ids in the ORIGINAL graph
+    depth: int         # hierarchy depth (l at the root, 0 at leaves)
+    pe_base: int       # PE id offset accumulated along the recursion
+    uid: int           # stable id along the hierarchy path (for salts)
+
+    @property
+    def n(self) -> int:
+        return self.vwgt.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.rows.shape[0]
+
+    def to_device(self, N: int, M: int) -> Graph:
+        rows = np.full(M, N - 1, np.int32)
+        cols = np.full(M, N - 1, np.int32)
+        ewgt = np.zeros(M, np.float32)
+        rows[: self.m] = self.rows
+        cols[: self.m] = self.cols
+        ewgt[: self.m] = self.ewgt
+        vwgt = np.zeros(N, np.float32)
+        vwgt[: self.n] = self.vwgt
+        counts = np.bincount(self.rows, minlength=N)
+        indptr = np.zeros(N + 1, np.int64)
+        np.cumsum(counts, out=indptr[1:])
+        return Graph(
+            vwgt=jnp.asarray(vwgt),
+            rows=jnp.asarray(rows),
+            cols=jnp.asarray(cols),
+            ewgt=jnp.asarray(ewgt),
+            indptr=jnp.asarray(np.minimum(indptr, self.m), jnp.int32),
+            n=jnp.asarray(self.n, jnp.int32),
+            m=jnp.asarray(self.m, jnp.int32),
+        )
+
+
+def host_graph_from(g: Graph) -> _HostGraph:
+    n = int(g.n)
+    m = int(g.m)
+    return _HostGraph(
+        vwgt=np.asarray(g.vwgt)[:n].astype(np.float64),
+        rows=np.asarray(g.rows)[:m].astype(np.int64),
+        cols=np.asarray(g.cols)[:m].astype(np.int64),
+        ewgt=np.asarray(g.ewgt)[:m].astype(np.float64),
+        orig_ids=np.arange(n, dtype=np.int64),
+        depth=0,
+        pe_base=0,
+        uid=0,
+    )
+
+
+def _split(hg: _HostGraph, part: np.ndarray, k: int, child_depth: int,
+           stride: int, arity: int) -> list[_HostGraph]:
+    """Extract the k induced block subgraphs of ``hg`` under ``part``."""
+    part = part[: hg.n]
+    relabel = np.zeros(hg.n, np.int64)
+    children = []
+    for b in range(k):
+        sel = np.nonzero(part == b)[0]
+        relabel[sel] = np.arange(sel.shape[0])
+        emask = (part[hg.rows] == b) & (part[hg.cols] == b)
+        children.append(
+            _HostGraph(
+                vwgt=hg.vwgt[sel],
+                rows=relabel[hg.rows[emask]],
+                cols=relabel[hg.cols[emask]],
+                ewgt=hg.ewgt[emask],
+                orig_ids=hg.orig_ids[sel],
+                depth=child_depth,
+                pe_base=hg.pe_base + b * stride,
+                uid=hg.uid * arity + b + 1,
+            )
+        )
+    return children
+
+
+# ---------------------------------------------------------------------------
+# the multisection driver
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MultisectionResult:
+    pe_of: np.ndarray            # [n] PE assignment (the mapping Pi)
+    stats: dict                   # timing / scheduling telemetry
+
+
+PartitionFn = Callable[..., jax.Array]
+
+
+def _eps_for(hg: _HostGraph, h: Hierarchy, eps: float, total_weight: float,
+             adaptive: bool) -> float:
+    if not adaptive:
+        return eps
+    d = hg.depth
+    k_sub = int(np.prod(h.a[:d])) if d > 0 else 1
+    return adaptive_epsilon(eps, total_weight, float(hg.vwgt.sum()), h.k, k_sub, d)
+
+
+def _partition_one(hg: _HostGraph, k: int, eps_val: float, preset: str,
+                   salt: int, pad_n: int | None = None, pad_m: int | None = None) -> np.ndarray:
+    N = pad_n or _next_pow2(hg.n)
+    M = pad_m or _next_pow2(max(hg.m, 1))
+    g = hg.to_device(N, M)
+    lv = num_levels(N, k)
+    part = partition(g, k, jnp.float32(eps_val), lv, preset, salt)
+    return np.asarray(part)[: hg.n]
+
+
+def hierarchical_multisection(
+    g: Graph,
+    h: Hierarchy,
+    eps: float = 0.03,
+    preset: str = "eco",
+    strategy: str = "bucket",
+    seed: int = 0,
+    adaptive: bool = True,
+) -> MultisectionResult:
+    """Partition ``g`` along ``h`` and return the (identity) mapping."""
+    root = host_graph_from(g)
+    root.depth = h.l
+    total_weight = float(root.vwgt.sum())
+    strides = (1,) + h.strides  # strides[d] = PEs under one depth-d block
+    pe_of = np.zeros(root.n, np.int64)
+    stats = {"partition_calls": 0, "levels": [], "strategy": strategy,
+             "padded_vertex_work": 0, "real_vertex_work": 0}
+
+    def record(batchN, realn):
+        stats["padded_vertex_work"] += int(batchN)
+        stats["real_vertex_work"] += int(realn)
+
+    current = [root]
+    t0 = time.time()
+    while current:
+        nxt: list[_HostGraph] = []
+        leaves = [hg for hg in current if hg.depth == 0]
+        for hg in leaves:
+            pe_of[hg.orig_ids] = hg.pe_base
+        work = [hg for hg in current if hg.depth > 0]
+        if not work:
+            break
+        lvl_t0 = time.time()
+        if strategy == "naive":
+            produced = _run_naive(work, h, eps, preset, seed, total_weight, adaptive, record)
+        elif strategy == "layer":
+            produced = _run_layer(work, h, eps, preset, seed, total_weight, adaptive, record, bucketed=False)
+        elif strategy == "bucket":
+            produced = _run_layer(work, h, eps, preset, seed, total_weight, adaptive, record, bucketed=True)
+        elif strategy == "queue":
+            produced = _run_queue(work, h, eps, preset, seed, total_weight, adaptive, record)
+        else:
+            raise ValueError(f"unknown strategy {strategy!r}")
+        stats["partition_calls"] += len(work)
+        stats["levels"].append({"graphs": len(work), "seconds": time.time() - lvl_t0})
+        nxt.extend(produced)
+        current = nxt
+    stats["seconds"] = time.time() - t0
+    return MultisectionResult(pe_of=pe_of, stats=stats)
+
+
+def _children_of(hg: _HostGraph, part: np.ndarray, h: Hierarchy) -> list[_HostGraph]:
+    d = hg.depth
+    arity = h.a[d - 1]
+    child_stride = int(np.prod(h.a[: d - 1])) if d > 1 else 1
+    return _split(hg, part, arity, d - 1, child_stride, arity)
+
+
+def _run_naive(work, h, eps, preset, seed, total_weight, adaptive, record):
+    out = []
+    for hg in work:
+        arity = h.a[hg.depth - 1]
+        e = _eps_for(hg, h, eps, total_weight, adaptive)
+        part = _partition_one(hg, arity, e, preset, salt=seed * 100003 + hg.uid)
+        record(_next_pow2(hg.n), hg.n)
+        out.extend(_children_of(hg, part, h))
+    return out
+
+
+def _run_layer(work, h, eps, preset, seed, total_weight, adaptive, record, bucketed: bool):
+    """One vmapped partition program per (bucket x arity) group."""
+    groups: dict[tuple[int, int, int], list[_HostGraph]] = {}
+    for hg in work:
+        if bucketed:
+            key_n = _next_pow2(hg.n)
+            key_m = _next_pow2(max(hg.m, 1))
+        else:
+            key_n = key_m = 0  # one group per arity; padded to layer max below
+        arity = h.a[hg.depth - 1]
+        groups.setdefault((key_n, key_m, arity), []).append(hg)
+
+    out = []
+    for (kn, km, arity), members in groups.items():
+        N = kn or _next_pow2(max(m.n for m in members))
+        M = km or _next_pow2(max(max(m.m, 1) for m in members))
+        gs = [m.to_device(N, M) for m in members]
+        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *gs)
+        eps_arr = jnp.asarray(
+            [_eps_for(m, h, eps, total_weight, adaptive) for m in members], jnp.float32
+        )
+        salts = jnp.asarray([seed * 100003 + m.uid for m in members], jnp.int32)
+        lv = num_levels(N, arity)
+        parts = jax.vmap(lambda gg, ee, ss: partition(gg, arity, ee, lv, preset, ss))(
+            batch, eps_arr, salts
+        )
+        parts = np.asarray(parts)
+        for m_i, hg in enumerate(members):
+            record(N, hg.n)
+            out.extend(_children_of(hg, parts[m_i][: hg.n], h))
+    return out
+
+
+def _run_queue(work, h, eps, preset, seed, total_weight, adaptive, record, workers: int = 4):
+    """PRIORITY QUEUE (Algorithm 2): master pops the largest subgraph,
+    dispatches to a worker; children re-enter the queue. Because XLA
+    executes dispatched programs asynchronously, host worker threads play
+    the role of the paper's thread groups."""
+    heap: list[tuple[int, int, _HostGraph]] = []
+    lock = threading.Lock()
+    out: list[_HostGraph] = []
+    pending = [0]  # number of in-flight + queued tasks
+    done = threading.Event()
+
+    def push(hg: _HostGraph):
+        with lock:
+            heapq.heappush(heap, (-hg.n, hg.uid, hg))
+            pending[0] += 1
+
+    for hg in work:
+        push(hg)
+
+    def worker():
+        while True:
+            with lock:
+                if pending[0] == 0:
+                    done.set()
+                    return
+                if not heap:
+                    task = None
+                else:
+                    task = heapq.heappop(heap)[2]
+            if task is None:
+                if done.is_set():
+                    return
+                time.sleep(0.001)
+                continue
+            arity = h.a[task.depth - 1]
+            e = _eps_for(task, h, eps, total_weight, adaptive)
+            part = _partition_one(task, arity, e, preset, salt=seed * 100003 + task.uid)
+            record(_next_pow2(task.n), task.n)
+            children = _children_of(task, part, h)
+            with lock:
+                pending[0] -= 1
+                for c in children:
+                    if c.depth > 0:
+                        heapq.heappush(heap, (-c.n, c.uid, c))
+                        pending[0] += 1
+                    else:
+                        out.append(c)
+                if pending[0] == 0:
+                    done.set()
+                    return
+
+    threads = [threading.Thread(target=worker) for _ in range(workers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return out
+
+
+STRATEGIES = ("naive", "layer", "bucket", "queue")

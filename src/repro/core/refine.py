@@ -1,0 +1,124 @@
+"""Refinement: balance-constrained label-propagation (parallel FM analogue).
+
+Per round, every vertex computes its connectivity to all k blocks in one
+sparse pass, proposes the best positive-gain move that respects capacity,
+and a global gain-ranked prefix filter admits moves per target block up to
+its remaining capacity. A hash-coloring alternation damps oscillation.
+A separate forced `rebalance` pass repairs over-capacity blocks at minimal
+edge-cut loss (used after uncoarsening projections).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .graph import Graph, block_weights, edge_mask, vertex_mask
+
+_NEG = -1e30
+
+
+def _vhash(n: int, salt) -> jax.Array:
+    s = jnp.asarray(salt).astype(jnp.uint32) * jnp.uint32(0x9E3779B9)
+    x = jnp.arange(n, dtype=jnp.uint32) * jnp.uint32(2654435761) ^ s
+    x = (x ^ (x >> 15)) * jnp.uint32(0x2C1B3C6D)
+    return x ^ (x >> 12)
+
+
+def connectivity(g: Graph, part: jax.Array, k: int) -> jax.Array:
+    """conn[u, b] = summed weight of edges from u into block b.  [N, k]."""
+    emask = edge_mask(g)
+    pcols = jnp.where(emask, part[g.cols], 0)
+    flat = g.rows * k + pcols
+    w = jnp.where(emask, g.ewgt, 0.0)
+    return jax.ops.segment_sum(w, flat, num_segments=g.N * k).reshape(g.N, k)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rounds"))
+def lp_refine(
+    g: Graph,
+    part: jax.Array,
+    k: int,
+    Lmax: jax.Array,
+    rounds: int = 4,
+    salt: int = 0,
+) -> jax.Array:
+    """Gain-positive, capacity-respecting label propagation refinement."""
+    N = g.N
+    idx = jnp.arange(N, dtype=jnp.int32)
+    vmask = vertex_mask(g)
+    h = _vhash(N, salt)
+
+    def one_round(r, part):
+        conn = connectivity(g, part, k)
+        W = block_weights(g, part, k)
+        cur_conn = jnp.take_along_axis(conn, part[:, None], axis=1)[:, 0]
+        gain = conn - cur_conn[:, None]
+        own = jax.nn.one_hot(part, k, dtype=bool)
+        fits = (W[None, :] + g.vwgt[:, None]) <= Lmax
+        cand_gain = jnp.where(fits & ~own, gain, _NEG)
+        best = jnp.argmax(cand_gain, axis=1).astype(jnp.int32)
+        gbest = jnp.max(cand_gain, axis=1)
+        color = ((h + jnp.uint32(r)) & jnp.uint32(1)) == 0
+        cand = vmask & (gbest > 0.0) & color
+        # gain-ranked capacity prefix per target block
+        order = jnp.argsort(jnp.where(cand, -gbest, jnp.inf), stable=True)
+        tgt_s = best[order]
+        cand_s = cand[order]
+        w_s = jnp.where(cand_s, g.vwgt[order], 0.0)
+        inflow = jnp.cumsum(jax.nn.one_hot(tgt_s, k, dtype=jnp.float32) * w_s[:, None], axis=0)
+        cap = Lmax - W
+        ok_s = cand_s & (jnp.take_along_axis(inflow, tgt_s[:, None], axis=1)[:, 0] <= jnp.maximum(cap[tgt_s], 0.0))
+        accept = jnp.zeros((N,), bool).at[order].set(ok_s)
+        return jnp.where(accept, best, part)
+
+    return jax.lax.fori_loop(0, rounds, one_round, part)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "rounds"))
+def rebalance(
+    g: Graph,
+    part: jax.Array,
+    k: int,
+    Lmax: jax.Array,
+    rounds: int = 8,
+    salt: int = 1,
+) -> jax.Array:
+    """Force epsilon-balance: drain over-capacity blocks via min-loss moves."""
+    N = g.N
+    vmask = vertex_mask(g)
+
+    def one_round(r, part):
+        conn = connectivity(g, part, k)
+        W = block_weights(g, part, k)
+        overflow = jnp.maximum(W - Lmax, 0.0)  # [k]
+        cur_conn = jnp.take_along_axis(conn, part[:, None], axis=1)[:, 0]
+        loss = cur_conn[:, None] - conn  # cost of moving u -> b
+        own = jax.nn.one_hot(part, k, dtype=bool)
+        fits = (W[None, :] + g.vwgt[:, None]) <= Lmax
+        cand_loss = jnp.where(fits & ~own, loss, jnp.inf)
+        tgt = jnp.argmin(cand_loss, axis=1).astype(jnp.int32)
+        lbest = jnp.min(cand_loss, axis=1)
+        src_over = overflow[part] > 0.0
+        cand = vmask & src_over & jnp.isfinite(lbest) & (g.vwgt > 0.0)
+        order = jnp.argsort(jnp.where(cand, lbest, jnp.inf), stable=True)
+        src_s = part[order]
+        tgt_s = tgt[order]
+        cand_s = cand[order]
+        w_s = jnp.where(cand_s, g.vwgt[order], 0.0)
+        outflow = jnp.cumsum(jax.nn.one_hot(src_s, k, dtype=jnp.float32) * w_s[:, None], axis=0)
+        inflow = jnp.cumsum(jax.nn.one_hot(tgt_s, k, dtype=jnp.float32) * w_s[:, None], axis=0)
+        # drain only what is needed (allow the boundary-crossing move), fill
+        # targets only up to capacity.
+        out_ok = (jnp.take_along_axis(outflow, src_s[:, None], axis=1)[:, 0] - w_s) < overflow[src_s]
+        in_ok = jnp.take_along_axis(inflow, tgt_s[:, None], axis=1)[:, 0] <= jnp.maximum(Lmax - W, 0.0)[tgt_s]
+        ok_s = cand_s & out_ok & in_ok
+        accept = jnp.zeros((N,), bool).at[order].set(ok_s)
+        return jnp.where(accept, tgt, part)
+
+    return jax.lax.fori_loop(0, rounds, one_round, part)
+
+
+def is_balanced(g: Graph, part: jax.Array, k: int, Lmax) -> jax.Array:
+    return jnp.all(block_weights(g, part, k) <= Lmax + 1e-6)

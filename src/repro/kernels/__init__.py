@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot spots (+ jnp oracles)."""
+from .ops import lp_gain, mapcost  # noqa: F401

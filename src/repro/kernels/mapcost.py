@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: J(C,D,Pi) communication-cost evaluation.
+
+Edge-parallel: the grid tiles the directed edge arrays; each program
+instance streams a ``(TILE_E,)`` slice of (rows, cols, ewgt) from HBM into
+VMEM, gathers both endpoint PE ids from the (VMEM-resident) assignment
+vector, computes the hierarchy distance with the mixed-radix bit-label
+trick entirely in registers, and writes a per-tile partial sum. The final
+reduction over tiles happens in the caller.
+
+TPU adaptation notes:
+* The hot operation in the C++ code is a scalar hash-table / array gather
+  per edge; here the per-edge distance is a dense [TILE_E, l] integer-divide
+  + compare + popcount-style reduction on the VPU — no MXU involvement.
+* ``pe_of`` (and the tiny ``g_below``/``dvec`` tables) are small enough for
+  VMEM (4 B x N; N <= 2^20 fits comfortably), so each edge tile performs
+  two vector gathers against VMEM instead of HBM random access — the TPU
+  analogue of the paper's O(1) bit-label distance queries.
+* TILE_E is a multiple of 8*128 to match VREG lanes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_E = 2048  # 2 * (8, 128) VREG tiles worth of edges
+
+
+def _mapcost_kernel(rows_ref, cols_ref, ewgt_ref, pe_ref, gb_ref, dv_ref, out_ref):
+    rows = rows_ref[...]
+    cols = cols_ref[...]
+    w = ewgt_ref[...]
+    pe = pe_ref[...]
+    pu = pe[rows]
+    pv = pe[cols]
+    l = gb_ref.shape[0]
+    lvl = jnp.zeros(rows.shape, jnp.int32)
+    d = jnp.zeros(rows.shape, jnp.float32)
+    # l is tiny (2..4): unrolled compare/select chain per level
+    for i in range(l):
+        gb = gb_ref[i]
+        differs = (pu // gb) != (pv // gb)
+        lvl = lvl + differs.astype(jnp.int32)
+    for i in range(l):
+        d = jnp.where(lvl == i + 1, dv_ref[i], d)
+    out_ref[0] = jnp.sum(w * d)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mapcost_pallas(
+    rows: jax.Array,
+    cols: jax.Array,
+    ewgt: jax.Array,
+    pe_of: jax.Array,
+    g_below: jax.Array,
+    dvec: jax.Array,
+    interpret: bool = True,
+) -> jax.Array:
+    """J(C,D,Pi) via the Pallas kernel. Pads the edge arrays to TILE_E."""
+    M = rows.shape[0]
+    Mp = ((M + TILE_E - 1) // TILE_E) * TILE_E
+    pad = Mp - M
+    N = pe_of.shape[0]
+    rows = jnp.pad(rows, (0, pad))
+    cols = jnp.pad(cols, (0, pad))
+    ewgt = jnp.pad(ewgt, (0, pad))
+    grid = (Mp // TILE_E,)
+
+    partial = pl.pallas_call(
+        _mapcost_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_E,), lambda i: (i,)),
+            pl.BlockSpec((TILE_E,), lambda i: (i,)),
+            pl.BlockSpec((TILE_E,), lambda i: (i,)),
+            pl.BlockSpec((N,), lambda i: (0,)),           # pe_of: whole vector in VMEM
+            pl.BlockSpec((g_below.shape[0],), lambda i: (0,)),
+            pl.BlockSpec((dvec.shape[0],), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((grid[0],), jnp.float32),
+        interpret=interpret,
+    )(rows, cols, ewgt, pe_of, g_below, dvec)
+    return jnp.sum(partial) / 2.0

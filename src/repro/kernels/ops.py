@@ -1,0 +1,61 @@
+"""Jitted public wrappers for the kernels.
+
+``backend`` selection: on TPU the Pallas kernels run compiled; on CPU (this
+container) they run in interpret mode for validation, and callers that need
+speed (the partitioner inner loops) use the jnp reference implementations,
+which XLA:CPU fuses well.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flashattn import flash_attention_pallas
+from .lp_gain import lp_gain_pallas
+from .mapcost import mapcost_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def mapcost(rows, cols, ewgt, pe_of, g_below, dvec, use_pallas: bool | None = None):
+    """J(C, D, Pi) over directed edge arrays (padding weight must be 0)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return mapcost_pallas(rows, cols, ewgt, pe_of, g_below, dvec,
+                              interpret=not _on_tpu())
+    return ref.mapcost_ref(rows, cols, ewgt, pe_of, g_below, dvec)
+
+
+def lp_gain(adj, adw, part, k: int, use_pallas: bool | None = None):
+    """(conn, best, gain) for balanced LP refinement over an ELL adjacency."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return lp_gain_pallas(adj, adw, part, k, interpret=not _on_tpu())
+    return ref.lp_gain_ref(adj, adw, part, k)
+
+
+def flash_attention(q, k, v, causal: bool = True, window: int = 0,
+                    use_pallas: bool | None = None):
+    """Tiled-softmax SDPA. q [B,S,H,D], k/v [B,S,Hkv,D] (GQA expanded here).
+
+    On TPU this is the fix for the prefill/train memory roofline term:
+    no [B,H,S,S] logits ever touch HBM (see kernels/flashattn.py)."""
+    B, S, H, D = q.shape
+    rep = H // k.shape[2]
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    flat = lambda x: jnp.swapaxes(x, 1, 2).reshape(B * H, S, D)
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        o = flash_attention_pallas(flat(q), flat(k), flat(v), causal, window,
+                                   interpret=not _on_tpu())
+    else:
+        o = ref.flash_ref(flat(q), flat(k), flat(v), causal, window)
+    return jnp.swapaxes(o.reshape(B, H, S, D), 1, 2)

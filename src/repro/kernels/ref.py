@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mapcost_ref(
+    rows: jax.Array,      # [M] i32
+    cols: jax.Array,      # [M] i32
+    ewgt: jax.Array,      # [M] f32 (0 on padding)
+    pe_of: jax.Array,     # [N] i32
+    g_below: jax.Array,   # [l] i32 group sizes below each level (1, a1, a1a2, ..)
+    dvec: jax.Array,      # [l] f32 distances
+) -> jax.Array:
+    """J(C,D,Pi): sum over directed edges of w * dist(pe_u, pe_v), halved."""
+    pu = pe_of[rows]
+    pv = pe_of[cols]
+    diff = (pu[:, None] // g_below[None, :]) != (pv[:, None] // g_below[None, :])
+    lvl = jnp.sum(diff.astype(jnp.int32), axis=-1)
+    safe = jnp.clip(lvl - 1, 0, dvec.shape[0] - 1)
+    d = jnp.where(lvl > 0, dvec[safe], 0.0)
+    return jnp.sum(ewgt * d) / 2.0
+
+
+def lp_gain_ref(
+    adj: jax.Array,       # [N, DEG] i32 padded neighbour ids (N = self/pad)
+    adw: jax.Array,       # [N, DEG] f32 edge weights (0 on padding)
+    part: jax.Array,      # [N] i32 current block of each vertex
+    k: int,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-vertex block connectivity, best alternative block and its gain.
+
+    Returns (conn [N,k], best [N], gain [N]).
+    """
+    N = adj.shape[0]
+    nbr_part = jnp.where(adj < N, part[jnp.clip(adj, 0, N - 1)], 0)
+    onehot = jax.nn.one_hot(nbr_part, k, dtype=adw.dtype)  # [N, DEG, k]
+    conn = jnp.einsum("nd,ndk->nk", adw, onehot)
+    cur = jnp.take_along_axis(conn, part[:, None], axis=1)[:, 0]
+    masked = jnp.where(jax.nn.one_hot(part, k, dtype=bool), -jnp.inf, conn)
+    best = jnp.argmax(masked, axis=1).astype(jnp.int32)
+    gain = jnp.max(masked, axis=1) - cur
+    return conn, best, gain
+
+
+def csr_to_ell(rows, cols, ewgt, N: int, DEG: int):
+    """Convert directed CSR edge arrays to padded ELL [N, DEG] (jnp).
+
+    Edges beyond DEG per row are dropped (callers choose DEG >= max degree).
+    Padding slots hold neighbour id N and weight 0.
+    """
+    order = jnp.argsort(rows, stable=True)
+    r, c, w = rows[order], cols[order], ewgt[order]
+    # position of each edge within its (sorted) row
+    M = r.shape[0]
+    rc = jnp.clip(r, 0, N - 1)
+    counts = jax.ops.segment_sum(jnp.ones((M,), jnp.int32), rc, num_segments=N)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    pos = jnp.arange(M, dtype=jnp.int32) - starts[rc]
+    slot = rc * DEG + pos
+    valid = (pos < DEG) & (r < N)
+    slot = jnp.where(valid, slot, N * DEG)
+    adj = jnp.full((N * DEG + 1,), N, jnp.int32).at[slot].set(c, mode="drop")[:-1]
+    adw = jnp.zeros((N * DEG + 1,), w.dtype).at[slot].set(jnp.where(valid, w, 0.0), mode="drop")[:-1]
+    return adj.reshape(N, DEG), adw.reshape(N, DEG)
+
+
+def flash_ref(q, k, v, causal: bool = True, window: int = 0):
+    """Oracle SDPA for the flash kernel. q/k/v [BH, S, D] -> [BH, S, D]."""
+    S = q.shape[1]
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= cols <= rows
+    if window > 0:
+        mask &= rows - cols < window
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,204 @@
+"""Parameter/batch/cache PartitionSpec rules (FSDP(data) x TP(model) baseline).
+
+DESIGN.md §5: weights are 2D-sharded P('data','model') (ZeRO-3 gather per
+layer inside the layer scan), activations batch-sharded over
+('pod','data'), attention heads / d_ff / vocab sharded over 'model'
+(Megatron TP). xLSTM (125M) replicates weights — model-parallelism gives
+nothing at that size; see DESIGN.md §6.
+"""
+from __future__ import annotations
+
+import re
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardCtx
+
+# (regex over path, base spec for the UNSTACKED leaf, trailing dims it names)
+_RULES: list[tuple[str, tuple]] = [
+    (r"embed/tok$", ("model", "data")),
+    (r"embed/out$", ("data", "model")),
+    (r"pos_(enc|dec)$", (None, None)),
+    (r"patch_proj$", (None, None)),
+    (r"(attn|xattn)/w[qkv]$", ("data", "model")),
+    (r"(attn|xattn)/wo$", ("model", "data")),
+    (r"(attn|xattn)/b[qkv]$", ("model",)),
+    (r"mlp/w_(gate|up)$", ("data", "model")),
+    (r"mlp/w_down$", ("model", "data")),
+    (r"mlp/b_up$", ("model",)),
+    (r"mlp/b_down$", (None,)),
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(gate|up)$", ("model", None, "data", None)),
+    (r"moe/w_down$", ("model", None, None, "data")),
+    (r"mamba/in_proj$", ("data", "model")),
+    (r"mamba/out_proj$", ("model", "data")),
+    (r"mamba/conv_w$", (None, "model")),
+    (r"mamba/w_[BC]$", ("model", None)),
+    (r"mamba/w_dt$", ("model", None)),
+    (r"mamba/(b_dt|A_log|D_skip)$", (None,)),
+    # xLSTM (small model): replicated weights
+    (r"(mlstm|slstm)/", ()),
+    (r"norm", ()),  # norm vectors replicated
+]
+
+
+# TP2D ("resident weights", serving): every weight matrix is sharded over
+# BOTH axes jointly on its TP dimension — no per-layer ZeRO all-gather at
+# all; the only collective left is the small per-layer activation
+# all-reduce. This is the §Perf H2 serving layout.
+_BOTH = ("data", "model")
+_RULES_TP2D: list[tuple[str, tuple]] = [
+    (r"embed/tok$", (_BOTH, None)),
+    (r"embed/out$", (None, _BOTH)),
+    (r"pos_(enc|dec)$", (None, None)),
+    (r"patch_proj$", (None, None)),
+    (r"(attn|xattn)/w[qkv]$", (None, _BOTH)),
+    (r"(attn|xattn)/wo$", (_BOTH, None)),
+    (r"(attn|xattn)/b[qkv]$", (_BOTH,)),
+    (r"mlp/w_(gate|up)$", (None, _BOTH)),
+    (r"mlp/w_down$", (_BOTH, None)),
+    (r"mlp/b_up$", (_BOTH,)),
+    (r"mlp/b_down$", (None,)),
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(gate|up)$", ("model", None, "data", None)),
+    (r"moe/w_down$", ("model", None, None, "data")),
+    (r"mamba/in_proj$", (None, _BOTH)),
+    (r"mamba/out_proj$", (_BOTH, None)),
+    (r"mamba/conv_w$", (None, _BOTH)),
+    (r"mamba/w_[BC]$", (_BOTH, None)),
+    (r"mamba/w_dt$", (_BOTH, None)),
+    (r"mamba/(b_dt|A_log|D_skip)$", (None,)),
+    (r"(mlstm|slstm)/", ()),
+    (r"norm", ()),
+]
+
+
+# SEQPAR (sequence parallelism, dense archs): activations shard over
+# (batch x sequence); weights ZeRO-shard over `data` only and replicate
+# over `model` — every matmul is local, attention logits are Sq-sharded,
+# softmax is shard-local. §Perf H7.
+_RULES_SEQPAR: list[tuple[str, tuple]] = [
+    (r"embed/tok$", (None, "data")),
+    (r"embed/out$", ("data", None)),
+    (r"pos_(enc|dec)$", (None, None)),
+    (r"patch_proj$", (None, None)),
+    (r"(attn|xattn)/w[qkvo]$", ("data", None)),
+    (r"(attn|xattn)/b[qkv]$", (None,)),
+    (r"mlp/w_(gate|up|down)$", ("data", None)),
+    (r"mlp/b_(up|down)$", (None,)),
+    (r"moe/router$", (None, None)),
+    (r"moe/w_(gate|up)$", ("model", None, "data", None)),
+    (r"moe/w_down$", ("model", None, None, "data")),
+    (r"mamba/(in_proj|out_proj)$", ("data", None)),
+    (r"mamba/conv_w$", (None, None)),
+    (r"mamba/w_[BC]$", ("data", None)),
+    (r"mamba/w_dt$", ("data", None)),
+    (r"mamba/(b_dt|A_log|D_skip)$", (None,)),
+    (r"(mlstm|slstm)/", ()),
+    (r"norm", ()),
+]
+
+_MODE_RULES = {"fsdp": _RULES, "tp2d": _RULES_TP2D, "seqpar": _RULES_SEQPAR}
+
+
+def spec_for(path: str, ndim: int, mode: str = "fsdp") -> P:
+    rules = _MODE_RULES[mode]
+    for pat, base in rules:
+        if re.search(pat, path):
+            if len(base) > ndim:
+                base = base[len(base) - ndim:]
+            pad = (None,) * (ndim - len(base))
+            return P(*(pad + tuple(base)))
+    return P(*((None,) * ndim))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+
+
+def param_specs(tree, mode: str = "fsdp"):
+    """Pytree of PartitionSpec matching ``tree``."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for(_path_str(path), leaf.ndim, mode), tree)
+
+
+def param_shardings(tree, mesh: Mesh, mode: str = "fsdp"):
+    return jax.tree.map(lambda spec: NamedSharding(mesh, spec),
+                        param_specs(tree, mode))
+
+
+def batch_specs(cfg: ModelConfig, batch_tree, ctx: ShardCtx):
+    from repro.models.sharding import batch_spec
+    bs = batch_spec(ctx)
+
+    def one(path, leaf):
+        return P(*((bs,) + (None,) * (leaf.ndim - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, batch_tree)
+
+
+def cache_specs(cfg: ModelConfig, cache_tree, ctx: ShardCtx):
+    """KV caches: batch over data axes, kv heads over model; SSM states:
+    batch over data, heads over model (hybrid) or replicated (xlstm)."""
+    from repro.models.sharding import batch_spec
+    bs = batch_spec(ctx)
+
+    msize = ctx.model_size
+
+    def one(path, leaf):
+        p = _path_str(path)
+        nd = leaf.ndim
+        if re.search(r"(^|/)(k|v)$", p) or "mem_kv" in p:
+            # [L?, B, S, Hkv, Dh]: shard kv heads over `model` when they
+            # divide it; otherwise shard the sequence (flash-decode style —
+            # softmax over the sharded axis becomes a small all-reduce).
+            H, S = leaf.shape[-2], leaf.shape[-3]
+            if H % msize == 0:
+                base = (bs, None, "model", None)
+            elif S % msize == 0:
+                base = (bs, "model", None, None)
+            else:
+                base = (bs, None, None, None)
+            pad = (None,) * (nd - len(base))
+            return P(*(pad + base))
+        if re.search(r"/h$", p) and nd >= 4:      # mamba h [.., B, H, N, P]
+            base = (bs, "model", None, None)
+            pad = (None,) * (nd - len(base))
+            return P(*(pad + base))
+        if re.search(r"/conv$", p):               # [.., B, K-1, d_in]
+            base = (bs, None, "model")
+            pad = (None,) * (nd - len(base))
+            return P(*(pad + base))
+        # xlstm states and misc: batch over data only (find the batch dim: 0)
+        return P(*((bs,) + (None,) * (nd - 1)))
+
+    return jax.tree_util.tree_map_with_path(one, cache_tree)
+
+
+def sanitize_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop axis names on dims they do not evenly divide (e.g. whisper's
+    odd vocab 51865 cannot be vocab-parallel over 16 devices; it falls back
+    to replicated for that dim)."""
+    out = []
+    for i, entry in enumerate(spec):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        out.append(entry if shape[i] % size == 0 else None)
+    return P(*out)
+
+
+def to_sds(tree, spec_tree, mesh: Mesh):
+    """abstract tree + specs -> ShapeDtypeStructs with shardings attached."""
+    return jax.tree.map(
+        lambda leaf, spec: jax.ShapeDtypeStruct(
+            leaf.shape, leaf.dtype,
+            sharding=NamedSharding(mesh, sanitize_spec(spec, leaf.shape, mesh))),
+        tree, spec_tree)

@@ -1,0 +1,147 @@
+"""GQA attention: training (full/sliding-window/cross) and decode paths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import CDTYPE, apply_rope, dense_init, rope_angles
+
+NEG = -1e30
+
+
+def attn_params(cfg: ModelConfig, key):
+    D, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, qd)),
+        "wk": dense_init(ks[1], (D, kvd)),
+        "wv": dense_init(ks[2], (D, kvd)),
+        "wo": dense_init(ks[3], (qd, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((qd,), jnp.float32)
+        p["bk"] = jnp.zeros((kvd,), jnp.float32)
+        p["bv"] = jnp.zeros((kvd,), jnp.float32)
+    return p
+
+
+def _project_qkv(cfg: ModelConfig, p, x):
+    B, S, _ = x.shape
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+def _expand_kv(cfg: ModelConfig, k):
+    """[B,S,Hkv,Dh] -> [B,S,H,Dh] by repeating each kv head."""
+    rep = cfg.num_heads // cfg.num_kv_heads
+    if rep == 1:
+        return k
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _sdpa(q, k, v, mask, bf16: bool = False):
+    """q [B,Sq,H,Dh], k/v [B,Sk,H,Dh], mask [1|B, Sq, Sk] bool (True=keep).
+
+    ``bf16``: compute QK^T in bf16 and upcast only for the softmax — the
+    VJP then carries bf16 cotangents through both einsums (halves attention
+    traffic and the TP all-reduce payloads in backward; §Perf H1)."""
+    scale = q.shape[-1] ** -0.5
+    if bf16:
+        logits = (jnp.einsum("bqhd,bkhd->bhqk", q, k) * jnp.asarray(scale, q.dtype)).astype(jnp.float32)
+    else:
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    logits = jnp.where(mask[:, None, :, :], logits, NEG)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+
+
+def self_attention(cfg: ModelConfig, p, x, *, causal: bool, positions=None,
+                   bf16: bool = False, ctx=None):
+    """Training/prefill self-attention. Returns (out [B,S,D], (k, v))."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x)
+    if ctx is not None and ctx.attn_seq_shard:
+        # context parallelism: logits [B,H,Sq/|model|,Sk] — softmax is local
+        # to each shard, k/v are gathered once per layer (cheap vs logits)
+        from .sharding import batch_spec
+        bs = batch_spec(ctx)
+        q = ctx.constrain(q, bs, "model", None, None)
+        k = ctx.constrain(k, bs, None, None, None)
+        v = ctx.constrain(v, bs, None, None, None)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if cfg.rope_theta > 0:
+        cos, sin = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        if bf16:  # angles stay f32; rotation runs in compute dtype
+            cos, sin = cos.astype(x.dtype), sin.astype(x.dtype)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if ctx is not None and ctx.use_flash:
+        from repro.kernels.ops import flash_attention
+        out = flash_attention(q, k, v, causal=causal,
+                              window=cfg.sliding_window)
+    else:
+        iq = jnp.arange(S)[:, None]
+        ik = jnp.arange(S)[None, :]
+        mask = jnp.ones((1, S, S), bool)
+        if causal:
+            mask = mask & (ik <= iq)[None]
+        if cfg.sliding_window > 0:
+            mask = mask & (iq - ik < cfg.sliding_window)[None]
+        out = _sdpa(q, _expand_kv(cfg, k), _expand_kv(cfg, v), mask, bf16=bf16)
+    out = out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+def cross_attention(cfg: ModelConfig, p, x, memory_kv):
+    """Decoder cross-attention against precomputed encoder (k, v)."""
+    B, S, _ = x.shape
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, cfg.num_heads, cfg.head_dim)
+    k, v = memory_kv
+    mask = jnp.ones((1, S, k.shape[1]), bool)
+    out = _sdpa(q, _expand_kv(cfg, k), _expand_kv(cfg, v), mask)
+    return out.reshape(B, S, cfg.q_dim) @ p["wo"].astype(x.dtype)
+
+
+def decode_attention(cfg: ModelConfig, p, x, cache_k, cache_v, pos):
+    """One-token decode. x [B,1,D]; cache_k/v [B, Smax, Hkv, Dh]; pos [] i32.
+
+    The KV cache is a plain ring-free buffer for full attention and a ring
+    buffer (index mod window) for sliding-window attention, so the cache for
+    `long_500k` is O(window), not O(seq).
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(cfg, p, x)  # S == 1
+    if cfg.rope_theta > 0:
+        posv = jnp.full((B, 1), pos)
+        cos, sin = rope_angles(posv, cfg.head_dim, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k_new = apply_rope(k_new, cos, sin)
+    Smax = cache_k.shape[1]
+    slot = pos % Smax if cfg.sliding_window > 0 else pos
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k_new, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v_new, (0, slot, 0, 0))
+    ik = jnp.arange(Smax)[None, :]
+    if cfg.sliding_window > 0:
+        # valid ring slots: the last min(pos+1, Smax) written entries
+        age = (slot - ik) % Smax
+        mask = (age <= jnp.minimum(pos, Smax - 1))[:, None, :]
+    else:
+        mask = (ik <= pos)[:, None, :]
+    out = _sdpa(q, _expand_kv(cfg, cache_k), _expand_kv(cfg, cache_v), mask)
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"].astype(x.dtype)
+    return out, cache_k, cache_v
+
+
+def decode_cross_attention(cfg: ModelConfig, p, x, memory_kv):
+    return cross_attention(cfg, p, x, memory_kv)

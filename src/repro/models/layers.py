@@ -1,0 +1,116 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings, init helpers."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import ModelConfig
+
+PDTYPE = jnp.float32      # parameter dtype (master)
+CDTYPE = jnp.bfloat16     # compute dtype
+
+
+def dense_init(key, shape, scale: float | None = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, PDTYPE) * s).astype(PDTYPE)
+
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w)).astype(dt)
+
+
+def layernorm(x, w, b, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return ((x - mu) * jax.lax.rsqrt(var + eps) * w + b).astype(dt)
+
+
+def norm_params(cfg: ModelConfig, key):
+    if cfg.norm == "rmsnorm":
+        return {"w": jnp.zeros((cfg.d_model,), PDTYPE)}
+    return {"w": jnp.ones((cfg.d_model,), PDTYPE), "b": jnp.zeros((cfg.d_model,), PDTYPE)}
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["w"])
+    return layernorm(x, p["w"], p["b"])
+
+
+def rope_angles(positions, head_dim: int, theta: float):
+    """positions [*] -> (cos, sin) of shape [*, head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., S, H, Dh]; cos/sin [..., S, Dh/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+def mlp_params(cfg: ModelConfig, key, d_ff: int | None = None):
+    D = cfg.d_model
+    F = d_ff if d_ff is not None else cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {
+            "w_gate": dense_init(ks[0], (D, F)),
+            "w_up": dense_init(ks[1], (D, F)),
+            "w_down": dense_init(ks[2], (F, D)),
+        }
+    return {
+        "w_up": dense_init(ks[0], (D, F)),
+        "b_up": jnp.zeros((F,), PDTYPE),
+        "w_down": dense_init(ks[1], (F, D)),
+        "b_down": jnp.zeros((D,), PDTYPE),
+    }
+
+
+def apply_mlp(cfg: ModelConfig, p, x):
+    if cfg.act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"].astype(x.dtype)) * (x @ p["w_up"].astype(x.dtype))
+        return h @ p["w_down"].astype(x.dtype)
+    h = jax.nn.gelu(x @ p["w_up"].astype(x.dtype) + p["b_up"].astype(x.dtype))
+    return h @ p["w_down"].astype(x.dtype) + p["b_down"].astype(x.dtype)
+
+
+def embed_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 2)
+    # 0.02 keeps tied-unembedding logits at O(1): std = sqrt(D) * 0.02
+    p = {"tok": dense_init(ks[0], (cfg.vocab_size, cfg.d_model), scale=0.02)}
+    if not cfg.tie_embeddings:
+        p["out"] = dense_init(ks[1], (cfg.d_model, cfg.vocab_size))
+    return p
+
+
+def embed_tokens(p, tokens):
+    return p["tok"][tokens].astype(CDTYPE)
+
+
+def unembed(cfg: ModelConfig, p, x):
+    w = p["tok"].T if cfg.tie_embeddings else p["out"]
+    return x @ w.astype(x.dtype)
+
+
+def softmax_xent(logits, labels, mask=None):
+    """Mean cross-entropy in f32. logits [..., V], labels [...] int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

@@ -1,0 +1,153 @@
+"""Mamba block in the SSD (state-space dual) chunked form.
+
+HARDWARE ADAPTATION (DESIGN.md §2.3): Jamba uses Mamba-1 selective scan,
+whose natural CUDA implementation is a fused recurrent kernel. The TPU-native
+equivalent is the matmul-dominant SSD/chunked form (Mamba-2): scalar decay
+per head, intra-chunk quadratic attention-like einsums (MXU-friendly) and
+inter-chunk state carried via an ASSOCIATIVE scan (log-depth, no while loop
+— keeps the layer-stack scan the only `while` in the compiled train step).
+
+Shapes: d_in = expand * d_model, heads H = d_in / P (P = 64), state N.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+P_HEAD = 64
+
+
+def mamba_dims(cfg: ModelConfig) -> tuple[int, int, int]:
+    d_in = cfg.mamba_expand * cfg.d_model
+    H = d_in // P_HEAD
+    return d_in, H, cfg.mamba_d_state
+
+
+def mamba_params(cfg: ModelConfig, key):
+    D = cfg.d_model
+    d_in, H, N = mamba_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * d_in)),
+        "conv_w": dense_init(ks[1], (cfg.mamba_d_conv, d_in), scale=0.5),
+        "w_B": dense_init(ks[2], (d_in, N)),
+        "w_C": dense_init(ks[3], (d_in, N)),
+        "w_dt": dense_init(ks[4], (d_in, H)),
+        "b_dt": jnp.full((H,), -2.0, jnp.float32),  # softplus(-2) ~ 0.13
+        "A_log": jnp.zeros((H,), jnp.float32),       # a = -exp(A_log) = -1
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "out_proj": dense_init(ks[5], (d_in, D)),
+    }
+
+
+def _causal_conv(u, w, state=None):
+    """Depthwise causal conv over seq. u [B,S,C]; w [K,C].
+    With ``state`` [B,K-1,C] (decode), returns (out, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((u.shape[0], K - 1, u.shape[2]), u.dtype)
+        ext = jnp.concatenate([pad, u], axis=1)
+    else:
+        ext = jnp.concatenate([state.astype(u.dtype), u], axis=1)
+    out = sum(ext[:, i : i + u.shape[1], :] * w[i].astype(u.dtype) for i in range(K))
+    new_state = ext[:, -(K - 1):, :] if K > 1 else None
+    return out, new_state
+
+
+def _ssd_chunked(X, B_, C_, lamb, chunk: int):
+    """SSD core. X [B,S,H,P] (already dt-scaled), B_/C_ [B,S,N],
+    lamb [B,S,H] log-decay (<=0). Returns y [B,S,H,P]."""
+    Bsz, S, H, P = X.shape
+    N = B_.shape[-1]
+    nc = S // chunk
+    Xc = X.reshape(Bsz, nc, chunk, H, P)
+    Bc = B_.reshape(Bsz, nc, chunk, N)
+    Cc = C_.reshape(Bsz, nc, chunk, N)
+    lc = lamb.reshape(Bsz, nc, chunk, H)
+    cum = jnp.cumsum(lc.astype(jnp.float32), axis=2)                # [B,nc,c,H]
+
+    # --- intra-chunk (quadratic, MXU) -----------------------------------
+    att0 = jnp.einsum("bgin,bgjn->bgij", Cc.astype(jnp.float32), Bc.astype(jnp.float32))
+    Ldec = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # [B,nc,i,j,H]
+    tri = (jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :])
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(Ldec), 0.0)
+    y_intra = jnp.einsum("bgij,bgijh,bgjhp->bgihp", att0, L, Xc.astype(jnp.float32))
+
+    # --- inter-chunk state via associative scan -------------------------
+    # per chunk: h_out = A_g h_in + S_g with
+    #   A_g = exp(cum_last)                       [B,nc,H]
+    #   S_g = sum_j exp(cum_last - cum_j) B_j X_j [B,nc,H,N,P]
+    dec_out = jnp.exp(cum[:, :, -1:, :] - cum)                       # [B,nc,c,H]
+    Sg = jnp.einsum("bgjn,bgjh,bgjhp->bghnp", Bc.astype(jnp.float32), dec_out, Xc.astype(jnp.float32))
+    Ag = jnp.exp(cum[:, :, -1, :])                                   # [B,nc,H]
+
+    def combine(a, b):
+        A1, S1 = a
+        A2, S2 = b
+        return A1 * A2, A2[..., None, None] * S1 + S2
+
+    Acum, Scum = jax.lax.associative_scan(combine, (Ag, Sg), axis=1)
+    # state BEFORE chunk g = Scum[g-1] (shift right; zero for first chunk)
+    h_prev = jnp.concatenate([jnp.zeros_like(Scum[:, :1]), Scum[:, :-1]], axis=1)
+    y_inter = jnp.einsum("bgin,bgih,bghnp->bgihp", Cc.astype(jnp.float32), jnp.exp(cum), h_prev)
+
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y
+
+
+def apply_mamba(cfg: ModelConfig, p, x, chunk: int = 128):
+    """x [B,S,D] -> [B,S,D] (training/prefill path)."""
+    Bsz, S, D = x.shape
+    d_in, H, N = mamba_dims(cfg)
+    chunk = min(chunk, S)
+    assert S % chunk == 0, "seq must be divisible by ssd chunk"
+
+    uz = x @ p["in_proj"].astype(x.dtype)
+    u, z = jnp.split(uz, 2, axis=-1)
+    u, _ = _causal_conv(u, p["conv_w"])
+    u = jax.nn.silu(u)
+
+    B_ = u @ p["w_B"].astype(u.dtype)
+    C_ = u @ p["w_C"].astype(u.dtype)
+    dt = jax.nn.softplus((u @ p["w_dt"].astype(u.dtype)).astype(jnp.float32) + p["b_dt"])
+    a = -jnp.exp(p["A_log"])                                         # [H] < 0
+    lamb = dt * a                                                    # [B,S,H]
+    X = u.reshape(Bsz, S, H, P_HEAD) * dt[..., None].astype(u.dtype)
+
+    y = _ssd_chunked(X, B_, C_, lamb, chunk)
+    y = y + u.reshape(Bsz, S, H, P_HEAD).astype(y.dtype) * p["D_skip"][None, None, :, None]
+    y = y.reshape(Bsz, S, d_in).astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"].astype(x.dtype)
+
+
+def mamba_state_init(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, H, N = mamba_dims(cfg)
+    return {
+        "h": jnp.zeros((batch, H, N, P_HEAD), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.mamba_d_conv - 1, d_in), dtype),
+    }
+
+
+def decode_mamba(cfg: ModelConfig, p, x, state):
+    """One-token decode. x [B,1,D]; returns (y [B,1,D], new state)."""
+    Bsz = x.shape[0]
+    d_in, H, N = mamba_dims(cfg)
+    uz = x @ p["in_proj"].astype(x.dtype)
+    u, z = jnp.split(uz, 2, axis=-1)
+    u, conv_state = _causal_conv(u, p["conv_w"], state=state["conv"])
+    u = jax.nn.silu(u)
+    B_ = (u @ p["w_B"].astype(u.dtype)).astype(jnp.float32)[:, 0]     # [B,N]
+    C_ = (u @ p["w_C"].astype(u.dtype)).astype(jnp.float32)[:, 0]
+    dt = jax.nn.softplus((u @ p["w_dt"].astype(u.dtype)).astype(jnp.float32) + p["b_dt"])[:, 0]  # [B,H]
+    a = -jnp.exp(p["A_log"])
+    alpha = jnp.exp(dt * a)                                           # [B,H]
+    Xt = u.reshape(Bsz, H, P_HEAD).astype(jnp.float32) * dt[..., None]
+    h = alpha[..., None, None] * state["h"] + jnp.einsum("bn,bhp->bhnp", B_, Xt)
+    y = jnp.einsum("bn,bhnp->bhp", C_, h)
+    y = y + u.reshape(Bsz, H, P_HEAD).astype(jnp.float32) * p["D_skip"][None, :, None]
+    y = y.reshape(Bsz, 1, d_in).astype(x.dtype) * jax.nn.silu(z)
+    out = y @ p["out_proj"].astype(x.dtype)
+    return out, {"h": h, "conv": conv_state}

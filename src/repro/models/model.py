@@ -1,0 +1,103 @@
+"""Family dispatch: one uniform API over the whole zoo.
+
+    init_fn(cfg, key, V)          -> params pytree
+    loss_fn(cfg, params, batch)   -> scalar (train objective)
+    prefill_fn / decode_fn        -> serving paths
+    input_specs(cfg, shape)       -> ShapeDtypeStructs for the dry-run
+    scan_trip_hints(cfg, shape)   -> while-loop trip counts for HLO analysis
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import transformer as tfm
+from . import whisper as wsp
+from .config import ModelConfig
+from .layers import CDTYPE
+from .sharding import ShardCtx
+
+
+def init_fn(cfg: ModelConfig, key, V: int = 1):
+    if cfg.is_encoder_decoder:
+        return wsp.init_params(cfg, key, V=V)
+    return tfm.init_params(cfg, key, V=V)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, ctx: ShardCtx | None = None):
+    if cfg.is_encoder_decoder:
+        return wsp.seq2seq_loss(cfg, params, batch, ctx)
+    return tfm.lm_loss(cfg, params, batch, ctx)
+
+
+def prefill_fn(cfg: ModelConfig, params, batch, ctx: ShardCtx | None = None):
+    if cfg.is_encoder_decoder:
+        return wsp.prefill_memory(cfg, params, batch["frames"], ctx)
+    return tfm.prefill(cfg, params, batch, ctx)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, V: int = 1):
+    if cfg.is_encoder_decoder:
+        cache = wsp.init_cache(cfg, batch, min(max_len, cfg.max_target_len), V=V)
+        # cross-attn memory of `max_len` encoder frames
+        cache["mem_kv"] = (
+            jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), CDTYPE),
+            jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), CDTYPE),
+        )
+        return cache
+    return tfm.init_cache(cfg, batch, max_len, V=V)
+
+
+def decode_fn(cfg: ModelConfig, params, tokens, cache, pos, ctx: ShardCtx | None = None):
+    if cfg.is_encoder_decoder:
+        return wsp.decode_step(cfg, params, tokens, cache, pos, ctx)
+    return tfm.decode_step(cfg, params, tokens, cache, pos, ctx)
+
+
+# ---------------------------------------------------------------------------
+# dry-run stand-ins
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, seq_len: int, global_batch: int, mode: str):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+    mode: train | prefill | decode  (decode: one token + cache of seq_len)
+    """
+    B, S = global_batch, seq_len
+    i32 = jnp.int32
+    if mode in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            tgt = min(S, cfg.max_target_len) if mode == "prefill" else min(S, 4096)
+            return {
+                "frames": jax.ShapeDtypeStruct((B, S, cfg.d_model), CDTYPE),
+                "tokens": jax.ShapeDtypeStruct((B, tgt), i32),
+                "labels": jax.ShapeDtypeStruct((B, tgt), i32),
+            }
+        if cfg.frontend == "vision_stub":
+            s_txt = S - cfg.num_patches
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, s_txt), i32),
+                "labels": jax.ShapeDtypeStruct((B, s_txt), i32),
+                "patch_embeds": jax.ShapeDtypeStruct((B, cfg.num_patches, cfg.d_model), CDTYPE),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    if mode == "decode":
+        return {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    raise ValueError(mode)
+
+
+def scan_trip_hints(cfg: ModelConfig, seq_len: int, mode: str,
+                    slstm_chunk: int = 1) -> list[int]:
+    """Trip counts of the `while` loops of a lowered step, in nesting order
+    (depth 1 first). Used by launch/hlo_analysis.py; see DESIGN.md §7."""
+    if cfg.is_encoder_decoder:
+        return [cfg.encoder_layers, cfg.num_layers]
+    if cfg.family == "hybrid":
+        return [cfg.num_layers // cfg.attn_period]
+    if cfg.family == "ssm":
+        # unrolled layers; each sLSTM block is one depth-1 time scan
+        return [max(seq_len // max(slstm_chunk, 1), 1) if mode != "decode" else 1]
+    return [cfg.num_layers]

@@ -1,0 +1,61 @@
+"""Sharding context threaded through the model zoo.
+
+Models are written sharding-agnostic; a ``ShardCtx`` (or None on a single
+device) supplies the mesh, axis names and constraint helpers. The MoE layer
+uses it to run expert-parallel inside ``shard_map``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Mesh
+    batch_axes: tuple[str, ...] = ("data",)   # ('pod','data') multi-pod
+    model_axis: str = "model"
+    # hillclimb knobs (see EXPERIMENTS.md §Perf)
+    seq_shard_attn: bool = False   # shard long KV over model axis at decode
+    zero3: bool = True             # shard weights over batch axes too
+    bf16_attn: bool = False        # bf16 QK^T / RoPE (kills f32 bwd traffic)
+    remat: str = "full"            # full | dots (save dot outputs)
+    weight_mode: str = "fsdp"      # fsdp | tp2d (decode: resident weights)
+    cast_params_once: bool = False  # bf16-cast stacked weights BEFORE the
+    # layer scan so the per-layer ZeRO all-gather moves bf16, not f32
+    attn_seq_shard: bool = False   # shard attention over the QUERY SEQUENCE
+    # instead of heads (context parallelism): no head/axis divisibility
+    # mismatch, logits sharded on Sq, softmax local -> no logits all-reduce
+    use_flash: bool = False        # tiled-softmax Pallas attention (TPU):
+    # removes [B,H,S,S] logits from HBM (kernels/flashattn.py)
+    slstm_chunk: int = 1           # sLSTM timesteps per scan iteration
+    # (amortizes recurrent-weight HBM reads; recurrence stays exact)
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+    @property
+    def batch_size(self) -> int:
+        out = 1
+        for a in self.batch_axes:
+            out *= self.mesh.shape[a]
+        return out
+
+    def constrain(self, x, *spec):
+        return jax.lax.with_sharding_constraint(x, NamedSharding(self.mesh, P(*spec)))
+
+
+def constrain(ctx: ShardCtx | None, x, *spec):
+    if ctx is None:
+        return x
+    return ctx.constrain(x, *spec)
+
+
+def batch_spec(ctx: ShardCtx | None):
+    if ctx is None or not ctx.batch_axes:
+        return None
+    return tuple(ctx.batch_axes) if len(ctx.batch_axes) > 1 else ctx.batch_axes[0]

@@ -1,0 +1,280 @@
+"""Decoder-only LM assembly for dense / MoE / hybrid / SSM / VLM families.
+
+Layer stacks are `lax.scan`s over stacked parameter pytrees (one compiled
+layer body — this is also what keeps the multi-pod dry-run and the HLO
+roofline analysis tractable: exactly one `while` per homogeneous stack).
+
+* dense/moe : scan over L identical blocks
+* hybrid    : scan over L/attn_period super-blocks (Jamba 1:7 pattern,
+              MoE every 2nd sub-layer, unrolled inside the body)
+* ssm       : unrolled (12 small xLSTM blocks; sLSTM time-scan inside)
+* vlm       : text tokens + precomputed patch embeddings (frontend stub)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mb
+from . import xlstm as xl
+from .config import ModelConfig
+from .layers import (CDTYPE, apply_mlp, apply_norm, embed_params, embed_tokens,
+                     mlp_params, norm_params, softmax_xent, unembed)
+from .moe import apply_moe, moe_params
+from .sharding import ShardCtx, batch_spec, constrain
+
+
+# ---------------------------------------------------------------------------
+# per-block params
+# ---------------------------------------------------------------------------
+
+def _block_params(cfg: ModelConfig, key, kind: str, V: int):
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = {"norm1": norm_params(cfg, ks[0]), "norm2": norm_params(cfg, ks[1])}
+    mixer, ff = (kind.split("+") + ["none"])[:2]
+    if mixer == "attn":
+        p["attn"] = attn.attn_params(cfg, ks[2])
+    elif mixer == "mamba":
+        p["mamba"] = mb.mamba_params(cfg, ks[2])
+    elif mixer == "mlstm":
+        p["mlstm"] = xl.mlstm_params(cfg, ks[2])
+    elif mixer == "slstm":
+        p["slstm"] = xl.slstm_params(cfg, ks[2])
+    if ff == "mlp":
+        p["mlp"] = mlp_params(cfg, ks[3])
+    elif ff == "moe":
+        p["moe"] = moe_params(cfg, ks[3], V=V)
+    return p
+
+
+def _seq_ax(ctx: ShardCtx | None):
+    return "model" if (ctx is not None and ctx.attn_seq_shard) else None
+
+
+def _apply_block(cfg: ModelConfig, p, x, kind: str, ctx: ShardCtx | None):
+    bs = batch_spec(ctx)
+    sq = _seq_ax(ctx)
+    mixer, ff = (kind.split("+") + ["none"])[:2]
+    h = apply_norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        out, _ = attn.self_attention(cfg, p["attn"], h, causal=True,
+                                     bf16=bool(ctx and ctx.bf16_attn), ctx=ctx)
+    elif mixer == "mamba":
+        out = mb.apply_mamba(cfg, p["mamba"], h)
+    elif mixer == "mlstm":
+        out = xl.apply_mlstm(cfg, p["mlstm"], h)
+    elif mixer == "slstm":
+        out = xl.apply_slstm(cfg, p["slstm"], h,
+                             time_chunk=(ctx.slstm_chunk if ctx else 1))
+    else:
+        raise ValueError(kind)
+    x = x + constrain(ctx, out, bs, _seq_ax(ctx), None)
+    if ff == "none":
+        return x
+    h = apply_norm(cfg, p["norm2"], x)
+    if ff == "moe":
+        out = apply_moe(cfg, p["moe"], h, ctx)
+    else:
+        out = apply_mlp(cfg, p["mlp"], h)
+    return x + constrain(ctx, out, bs, _seq_ax(ctx), None)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _stack_params(cfg: ModelConfig, key, kind: str, n: int, V: int):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _block_params(cfg, k, kind, V))(keys)
+
+
+def init_params(cfg: ModelConfig, key, V: int = 1):
+    ks = jax.random.split(key, 8)
+    params: dict[str, Any] = {"embed": embed_params(cfg, ks[0]), "final_norm": norm_params(cfg, ks[1])}
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid":
+        n_super = cfg.num_layers // cfg.attn_period
+        sub = {}
+        for i, kind in enumerate(kinds):
+            sub[f"sub{i}"] = _stack_params(cfg, jax.random.fold_in(ks[2], i), kind, n_super, V)
+        params["blocks"] = sub
+    elif cfg.family == "ssm":
+        for i, kind in enumerate(kinds):
+            params[f"layer{i}"] = _block_params(cfg, jax.random.fold_in(ks[2], i), kind, V)
+    else:
+        params["blocks"] = _stack_params(cfg, ks[2], kinds[0], cfg.num_layers, V)
+    if cfg.frontend == "vision_stub":
+        params["patch_proj"] = jnp.eye(cfg.d_model, dtype=jnp.float32)  # stub projector
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def backbone(cfg: ModelConfig, params, x, ctx: ShardCtx | None, remat: bool = True):
+    """x [B,S,D] -> [B,S,D] hidden states."""
+    kinds = cfg.layer_kinds()
+    bs = batch_spec(ctx)
+    x = constrain(ctx, x, bs, _seq_ax(ctx), None)
+
+    ckpt_kwargs = {}
+    if ctx is not None and ctx.remat == "dots":
+        ckpt_kwargs["policy"] = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+
+    if ctx is not None and ctx.cast_params_once and "blocks" in params:
+        # cast sharded master weights to compute dtype OUTSIDE the scan:
+        # the per-layer ZeRO-3 all-gather then moves bf16 payloads (H3).
+        from .layers import CDTYPE as _CD
+        params = dict(params)
+        params["blocks"] = jax.tree.map(
+            lambda p: p.astype(_CD) if p.dtype == jnp.float32 else p,
+            params["blocks"])
+
+    if cfg.family == "ssm":
+        for i, kind in enumerate(kinds):
+            fn = functools.partial(_apply_block, cfg, kind=kind, ctx=ctx)
+            if remat:
+                fn = jax.checkpoint(fn, **ckpt_kwargs)
+            x = fn(params[f"layer{i}"], x)
+    elif cfg.family == "hybrid":
+        def body(h, layer_p):
+            for i, kind in enumerate(kinds):
+                h = _apply_block(cfg, layer_p[f"sub{i}"], h, kind, ctx)
+            return h, ()
+        if remat:
+            body = jax.checkpoint(body, **ckpt_kwargs)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        kind = kinds[0]
+        def body(h, layer_p):
+            return _apply_block(cfg, layer_p, h, kind, ctx), ()
+        if remat:
+            body = jax.checkpoint(body, **ckpt_kwargs)
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def embed_inputs(cfg: ModelConfig, params, batch, ctx: ShardCtx | None):
+    """Token (and stub-modality) embedding. Returns (x [B,S,D], loss mask)."""
+    tokens = batch["tokens"]
+    x = embed_tokens(params["embed"], tokens)
+    mask = jnp.ones(tokens.shape, jnp.float32)
+    if cfg.frontend == "vision_stub":
+        patches = batch["patch_embeds"].astype(CDTYPE) @ params["patch_proj"].astype(CDTYPE)
+        x = jnp.concatenate([patches, x], axis=1)
+        mask = jnp.concatenate([jnp.zeros(patches.shape[:2], jnp.float32), mask], axis=1)
+    return x, mask
+
+
+def lm_loss(cfg: ModelConfig, params, batch, ctx: ShardCtx | None = None):
+    """Next-token cross-entropy. batch: tokens [B,S], labels [B,S] (+stubs)."""
+    x, mask = embed_inputs(cfg, params, batch, ctx)
+    h = backbone(cfg, params, x, ctx)
+    if cfg.frontend == "vision_stub":
+        h = h[:, -batch["tokens"].shape[1]:, :]  # loss over text positions
+        mask = mask[:, -batch["tokens"].shape[1]:]
+    logits = unembed(cfg, params["embed"], h)
+    bs = batch_spec(ctx)
+    if _seq_ax(ctx):
+        logits = constrain(ctx, logits, bs, "model", None)
+    else:
+        logits = constrain(ctx, logits, bs, None, "model")
+    return softmax_xent(logits, batch["labels"], mask)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token) + prefill
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, V: int = 1):
+    """Decode cache pytree. Attention layers get [B, Smax(|window), Hkv, Dh];
+    SSM layers get recurrent states (O(1) in sequence length)."""
+    S = min(max_len, cfg.sliding_window) if cfg.sliding_window > 0 else max_len
+    kv = lambda: {
+        "k": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), CDTYPE),
+        "v": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), CDTYPE),
+    }
+    kinds = cfg.layer_kinds()
+    if cfg.family == "hybrid":
+        n_super = cfg.num_layers // cfg.attn_period
+        def stack(tree):
+            return jax.tree.map(lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), tree)
+        sub = {}
+        for i, kind in enumerate(kinds):
+            mixer = kind.split("+")[0]
+            sub[f"sub{i}"] = stack(kv() if mixer == "attn" else mb.mamba_state_init(cfg, batch))
+        return sub
+    if cfg.family == "ssm":
+        return {
+            f"layer{i}": (xl.slstm_state_init(cfg, batch) if k == "slstm"
+                          else xl.mlstm_state_init(cfg, batch))
+            for i, k in enumerate(kinds)
+        }
+    def stack(tree):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (cfg.num_layers,) + a.shape), tree)
+    return stack(kv())
+
+
+def _decode_block(cfg: ModelConfig, p, x, kind: str, cache, pos, ctx):
+    mixer, ff = (kind.split("+") + ["none"])[:2]
+    h = apply_norm(cfg, p["norm1"], x)
+    if mixer == "attn":
+        out, ck, cv = attn.decode_attention(cfg, p["attn"], h, cache["k"], cache["v"], pos)
+        cache = {"k": ck, "v": cv}
+    elif mixer == "mamba":
+        out, cache = mb.decode_mamba(cfg, p["mamba"], h, cache)
+    elif mixer == "mlstm":
+        out, cache = xl.decode_mlstm(cfg, p["mlstm"], h, cache)
+    elif mixer == "slstm":
+        out, cache = xl.decode_slstm(cfg, p["slstm"], h, cache)
+    x = x + out
+    if ff != "none":
+        h = apply_norm(cfg, p["norm2"], x)
+        out = apply_moe(cfg, p["moe"], h, ctx) if ff == "moe" else apply_mlp(cfg, p["mlp"], h)
+        x = x + out
+    return x, cache
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos, ctx: ShardCtx | None = None):
+    """tokens [B,1] -> (logits [B,1,V], new cache). pos: current position."""
+    kinds = cfg.layer_kinds()
+    x = embed_tokens(params["embed"], tokens)
+    if cfg.family == "ssm":
+        new_cache = {}
+        for i, kind in enumerate(kinds):
+            x, new_cache[f"layer{i}"] = _decode_block(
+                cfg, params[f"layer{i}"], x, kind, cache[f"layer{i}"], pos, ctx)
+    elif cfg.family == "hybrid":
+        def body(h, scanned):
+            layer_p, layer_c = scanned
+            new_c = {}
+            for i, kind in enumerate(kinds):
+                h, new_c[f"sub{i}"] = _decode_block(
+                    cfg, layer_p[f"sub{i}"], h, kind, layer_c[f"sub{i}"], pos, ctx)
+            return h, new_c
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    else:
+        kind = kinds[0]
+        def body(h, scanned):
+            layer_p, layer_c = scanned
+            h, new_c = _decode_block(cfg, layer_p, h, kind, layer_c, pos, ctx)
+            return h, new_c
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, batch, ctx: ShardCtx | None = None):
+    """Prefill forward: returns last-position logits (cache write elided —
+    the dry-run measures the dominant compute; see serve/engine.py for the
+    cache-materializing version used at small scale)."""
+    x, _ = embed_inputs(cfg, params, batch, ctx)
+    h = backbone(cfg, params, x, ctx, remat=False)
+    logits = unembed(cfg, params["embed"], h[:, -1:, :])
+    return logits

@@ -1,0 +1,162 @@
+"""Whisper-style encoder-decoder backbone (conv frontend is a STUB by
+assignment: ``input_specs`` supplies precomputed frame embeddings)."""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from .config import ModelConfig
+from .layers import (CDTYPE, apply_mlp, apply_norm, dense_init, embed_params,
+                     embed_tokens, mlp_params, norm_params, softmax_xent, unembed)
+from .sharding import ShardCtx, batch_spec, constrain
+
+
+def _enc_block_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 4)
+    return {
+        "norm1": norm_params(cfg, ks[0]),
+        "attn": attn.attn_params(cfg, ks[1]),
+        "norm2": norm_params(cfg, ks[2]),
+        "mlp": mlp_params(cfg, ks[3]),
+    }
+
+
+def _dec_block_params(cfg: ModelConfig, key):
+    ks = jax.random.split(key, 6)
+    return {
+        "norm1": norm_params(cfg, ks[0]),
+        "attn": attn.attn_params(cfg, ks[1]),
+        "norm2": norm_params(cfg, ks[2]),
+        "xattn": attn.attn_params(cfg, ks[3]),
+        "norm3": norm_params(cfg, ks[4]),
+        "mlp": mlp_params(cfg, ks[5]),
+    }
+
+
+def init_params(cfg: ModelConfig, key, V: int = 1):
+    ks = jax.random.split(key, 6)
+    enc_keys = jax.random.split(ks[0], cfg.encoder_layers)
+    dec_keys = jax.random.split(ks[1], cfg.num_layers)
+    return {
+        "embed": embed_params(cfg, ks[2]),
+        "pos_enc": dense_init(ks[3], (8192, cfg.d_model), scale=0.01),
+        "pos_dec": dense_init(ks[4], (cfg.max_target_len, cfg.d_model), scale=0.01),
+        "enc": jax.vmap(lambda k: _enc_block_params(cfg, k))(enc_keys),
+        "dec": jax.vmap(lambda k: _dec_block_params(cfg, k))(dec_keys),
+        "enc_norm": norm_params(cfg, ks[5]),
+        "final_norm": norm_params(cfg, ks[5]),
+    }
+
+
+def encode(cfg: ModelConfig, params, frames, ctx: ShardCtx | None):
+    """frames [B, T, D] (stub conv output) -> encoder states [B, T, D]."""
+    bs = batch_spec(ctx)
+    T = frames.shape[1]
+    pos = params["pos_enc"]
+    if T > pos.shape[0]:  # long-prefill shapes: tile the table (stub-safe)
+        reps = -(-T // pos.shape[0])
+        pos = jnp.tile(pos, (reps, 1))
+    x = frames.astype(CDTYPE) + pos[:T].astype(CDTYPE)[None]
+    x = constrain(ctx, x, bs, None, None)
+
+    def body(h, layer_p):
+        a = apply_norm(cfg, layer_p["norm1"], h)
+        out, _ = attn.self_attention(cfg, layer_p["attn"], a, causal=False)
+        h = h + constrain(ctx, out, bs, None, None)
+        a = apply_norm(cfg, layer_p["norm2"], h)
+        return h + constrain(ctx, apply_mlp(cfg, layer_p["mlp"], a), bs, None, None), ()
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def decode_train(cfg: ModelConfig, params, tokens, memory, ctx: ShardCtx | None):
+    """Teacher-forced decoder. tokens [B,S]; memory [B,T,D]."""
+    bs = batch_spec(ctx)
+    S = tokens.shape[1]
+    pos = params["pos_dec"]
+    if S > pos.shape[0]:
+        pos = jnp.tile(pos, (-(-S // pos.shape[0]), 1))
+    x = embed_tokens(params["embed"], tokens) + pos[:S].astype(CDTYPE)[None]
+
+    # precompute shared memory K/V once per layer inside the scan body
+    def body(h, layer_p):
+        a = apply_norm(cfg, layer_p["norm1"], h)
+        out, _ = attn.self_attention(cfg, layer_p["attn"], a, causal=True)
+        h = h + constrain(ctx, out, bs, None, None)
+        a = apply_norm(cfg, layer_p["norm2"], h)
+        B, T, _ = memory.shape
+        mk = (memory @ layer_p["xattn"]["wk"].astype(memory.dtype)).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        mv = (memory @ layer_p["xattn"]["wv"].astype(memory.dtype)).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        out = attn.cross_attention(cfg, layer_p["xattn"], a, (mk, mv))
+        h = h + constrain(ctx, out, bs, None, None)
+        a = apply_norm(cfg, layer_p["norm3"], h)
+        return h + constrain(ctx, apply_mlp(cfg, layer_p["mlp"], a), bs, None, None), ()
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec"])
+    return apply_norm(cfg, params["final_norm"], x)
+
+
+def seq2seq_loss(cfg: ModelConfig, params, batch, ctx: ShardCtx | None = None):
+    """batch: frames [B,T,D] (stub), tokens [B,S], labels [B,S]."""
+    memory = encode(cfg, params, batch["frames"], ctx)
+    h = decode_train(cfg, params, batch["tokens"], memory, ctx)
+    logits = unembed(cfg, params["embed"], h)
+    logits = constrain(ctx, logits, batch_spec(ctx), None, "model")
+    return softmax_xent(logits, batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, V: int = 1):
+    """Self-attn KV cache for the decoder + cross-attn memory K/V."""
+    return {
+        "self": {
+            "k": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), CDTYPE),
+            "v": jnp.zeros((cfg.num_layers, batch, max_len, cfg.num_kv_heads, cfg.head_dim), CDTYPE),
+        },
+        "mem_kv": None,  # filled by prefill_memory below (shape depends on T)
+    }
+
+
+def prefill_memory(cfg: ModelConfig, params, frames, ctx: ShardCtx | None = None):
+    """Encode audio and precompute cross-attention K/V per decoder layer."""
+    memory = encode(cfg, params, frames, ctx)
+    B, T, _ = memory.shape
+
+    def per_layer(layer_p):
+        mk = (memory @ layer_p["xattn"]["wk"].astype(memory.dtype)).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        mv = (memory @ layer_p["xattn"]["wv"].astype(memory.dtype)).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        return mk, mv
+
+    return jax.vmap(per_layer)(params["dec"])  # ([L,B,T,Hkv,Dh], [L,...])
+
+
+def decode_step(cfg: ModelConfig, params, tokens, cache, pos, ctx: ShardCtx | None = None):
+    """One decoder token against cached memory K/V. tokens [B,1]."""
+    x = embed_tokens(params["embed"], tokens)
+    pos_emb = jax.lax.dynamic_slice_in_dim(
+        params["pos_dec"], jnp.clip(pos, 0, cfg.max_target_len - 1), 1, axis=0)
+    x = x + pos_emb.astype(CDTYPE)[None]
+
+    mk, mv = cache["mem_kv"]
+
+    def body(h, scanned):
+        layer_p, ck, cv, lmk, lmv = scanned
+        a = apply_norm(cfg, layer_p["norm1"], h)
+        out, ck, cv = attn.decode_attention(cfg, layer_p["attn"], a, ck, cv, pos)
+        h = h + out
+        a = apply_norm(cfg, layer_p["norm2"], h)
+        h = h + attn.cross_attention(cfg, layer_p["xattn"], a, (lmk, lmv))
+        a = apply_norm(cfg, layer_p["norm3"], h)
+        h = h + apply_mlp(cfg, layer_p["mlp"], a)
+        return h, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec"], cache["self"]["k"], cache["self"]["v"], mk, mv))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    new_cache = {"self": {"k": nk, "v": nv}, "mem_kv": cache["mem_kv"]}
+    return logits, new_cache

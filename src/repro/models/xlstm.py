@@ -1,0 +1,213 @@
+"""xLSTM blocks: mLSTM (parallel chunkwise, matrix memory) and sLSTM
+(sequential scan with memory mixing).
+
+TPU adaptation: mLSTM's quadratic/chunkwise form maps to MXU einsums with
+an associative scan carrying the (C, n) matrix memory across chunks — no
+while loop. sLSTM's memory mixing is inherently sequential (the paper says
+so), so it is a `lax.scan` over time; its per-step work is a block-diagonal
+matmul batched over heads. Stabilization uses the xLSTM m-state in log
+space (clipped for the chunkwise weights).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init, rmsnorm
+
+CLIP = 30.0
+
+
+def _heads(cfg: ModelConfig) -> tuple[int, int]:
+    H = cfg.num_heads
+    return H, cfg.d_model // H
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_params(cfg: ModelConfig, key):
+    D = cfg.d_model
+    H, P = _heads(cfg)
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (D, D)),
+        "wk": dense_init(ks[1], (D, D)),
+        "wv": dense_init(ks[2], (D, D)),
+        "wi": dense_init(ks[3], (D, H), scale=0.01),
+        "wf": dense_init(ks[4], (D, H), scale=0.01),
+        "bf": jnp.full((H,), 3.0, jnp.float32),  # forget-gate bias -> ~1
+        "wo": dense_init(ks[5], (D, D)),
+        "norm": jnp.zeros((D,), jnp.float32),
+    }
+
+
+def apply_mlstm(cfg: ModelConfig, p, x, chunk: int = 256):
+    """x [B,S,D] -> [B,S,D], chunkwise parallel form."""
+    B, S, D = x.shape
+    H, P = _heads(cfg)
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, P)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, S, H, P) / jnp.sqrt(P).astype(x.dtype)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, S, H, P)
+    logi = (x @ p["wi"].astype(x.dtype)).astype(jnp.float32)                     # [B,S,H]
+    logf = jax.nn.log_sigmoid((x @ p["wf"].astype(x.dtype)).astype(jnp.float32) + p["bf"])
+
+    qc = q.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    kc = k.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    vc = v.reshape(B, nc, chunk, H, P).astype(jnp.float32)
+    lic = logi.reshape(B, nc, chunk, H)
+    cumf = jnp.cumsum(logf.reshape(B, nc, chunk, H), axis=2)                     # [B,nc,c,H]
+
+    # intra-chunk: w_ij = exp(cumf_i - cumf_j + logi_j), i >= j
+    Dij = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + lic[:, :, None, :, :]
+    tri = jnp.arange(chunk)[:, None] >= jnp.arange(chunk)[None, :]
+    W = jnp.where(tri[None, None, :, :, None], jnp.exp(jnp.clip(Dij, -CLIP, CLIP)), 0.0)
+    att = jnp.einsum("bgihp,bgjhp->bgijh", qc, kc) * W                           # [B,nc,i,j,H]
+    y_intra = jnp.einsum("bgijh,bgjhp->bgihp", att, vc)
+    n_intra = jnp.sum(att, axis=3)                                               # [B,nc,i,H] row mass
+
+    # inter-chunk: matrix memory C [B,H,P,P], mass n [B,H,P]
+    dec_out = jnp.exp(jnp.clip(cumf[:, :, -1:, :] - cumf + lic, -CLIP, CLIP))    # [B,nc,c,H]
+    Cg = jnp.einsum("bgjhp,bgjh,bgjhq->bghpq", kc, dec_out, vc)                  # kv^T sums
+    ng = jnp.einsum("bgjhp,bgjh->bghp", kc, dec_out)
+    Ag = jnp.exp(jnp.clip(cumf[:, :, -1, :], -CLIP, CLIP))                       # [B,nc,H]
+
+    def combine(a, b):
+        A1, C1, n1 = a
+        A2, C2, n2 = b
+        return A1 * A2, A2[..., None, None] * C1 + C2, A2[..., None] * n1 + n2
+
+    Acum, Ccum, ncum = jax.lax.associative_scan(combine, (Ag, Cg, ng), axis=1)
+    C_prev = jnp.concatenate([jnp.zeros_like(Ccum[:, :1]), Ccum[:, :-1]], axis=1)
+    n_prev = jnp.concatenate([jnp.zeros_like(ncum[:, :1]), ncum[:, :-1]], axis=1)
+    gi = jnp.exp(jnp.clip(cumf, -CLIP, CLIP))                                    # [B,nc,c,H]
+    y_inter = jnp.einsum("bgihp,bgih,bghpq->bgihq", qc, gi, C_prev)
+    n_inter = jnp.einsum("bgihp,bgih,bghp->bgih", qc, gi, n_prev)
+
+    # normalizer: |sum_j w_ij (q_i . k_j)| accumulated mass, floored at 1
+    denom = jnp.maximum(jnp.abs(n_intra + n_inter), 1.0)[..., None]
+    y = (y_intra + y_inter) / denom
+    y = y.reshape(B, S, H, P)
+    # per-head RMS norm, then output proj
+    y = rmsnorm(y.reshape(B, S, D).astype(x.dtype), p["norm"])
+    return y @ p["wo"].astype(x.dtype)
+
+
+def mlstm_state_init(cfg: ModelConfig, batch: int):
+    H, P = _heads(cfg)
+    return {
+        "C": jnp.zeros((batch, H, P, P), jnp.float32),
+        "n": jnp.zeros((batch, H, P), jnp.float32),
+        "f_acc": jnp.zeros((batch, H), jnp.float32),
+    }
+
+
+def decode_mlstm(cfg: ModelConfig, p, x, state):
+    B = x.shape[0]
+    D = cfg.d_model
+    H, P = _heads(cfg)
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, H, P).astype(jnp.float32)
+    k = (x @ p["wk"].astype(x.dtype)).reshape(B, H, P).astype(jnp.float32) / jnp.sqrt(P)
+    v = (x @ p["wv"].astype(x.dtype)).reshape(B, H, P).astype(jnp.float32)
+    logi = (x @ p["wi"].astype(x.dtype)).astype(jnp.float32)[:, 0]
+    logf = jax.nn.log_sigmoid((x @ p["wf"].astype(x.dtype)).astype(jnp.float32) + p["bf"])[:, 0]
+    fa = jnp.exp(jnp.clip(logf, -CLIP, CLIP))
+    ia = jnp.exp(jnp.clip(logi, -CLIP, CLIP))
+    C = fa[..., None, None] * state["C"] + ia[..., None, None] * jnp.einsum("bhp,bhq->bhpq", k, v)
+    n = fa[..., None] * state["n"] + ia[..., None] * k
+    num = jnp.einsum("bhp,bhpq->bhq", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q, n)), 1.0)[..., None]
+    y = (num / den).reshape(B, 1, D).astype(x.dtype)
+    y = rmsnorm(y, p["norm"])
+    return y @ p["wo"].astype(x.dtype), {"C": C, "n": n, "f_acc": state["f_acc"]}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_params(cfg: ModelConfig, key):
+    D = cfg.d_model
+    H, P = _heads(cfg)
+    ks = jax.random.split(key, 3)
+    return {
+        "W": dense_init(ks[0], (D, 4 * D)),          # z, i, f, o pre-activations
+        "R": dense_init(ks[1], (H, P, 4 * P), scale=0.5 / jnp.sqrt(P)),  # block-diag recurrent
+        "b": jnp.zeros((4 * D,), jnp.float32),
+        "norm": jnp.zeros((D,), jnp.float32),
+        "wo": dense_init(ks[2], (D, D)),
+    }
+
+
+def slstm_state_init(cfg: ModelConfig, batch: int):
+    H, P = _heads(cfg)
+    return {
+        "c": jnp.zeros((batch, H, P), jnp.float32),
+        "n": jnp.ones((batch, H, P), jnp.float32),
+        "h": jnp.zeros((batch, H, P), jnp.float32),
+        "m": jnp.zeros((batch, H, P), jnp.float32),
+    }
+
+
+def _slstm_step(cfg: ModelConfig, p, wx_t, state):
+    """wx_t [B, 4D] precomputed W x_t + b; state pytree of [B,H,P]."""
+    H, P = _heads(cfg)
+    B = wx_t.shape[0]
+    rh = jnp.einsum("bhp,hpq->bhq", state["h"].astype(wx_t.dtype), p["R"].astype(wx_t.dtype))
+    pre = (wx_t.reshape(B, H, 4 * P) + rh).astype(jnp.float32)
+    z, i, f, o = jnp.split(pre, 4, axis=-1)
+    z = jnp.tanh(z)
+    o = jax.nn.sigmoid(o)
+    logf = jax.nn.log_sigmoid(f)
+    m_new = jnp.maximum(logf + state["m"], i)
+    ig = jnp.exp(i - m_new)
+    fg = jnp.exp(logf + state["m"] - m_new)
+    c = fg * state["c"] + ig * z
+    n = jnp.maximum(fg * state["n"] + ig, 1e-6)
+    h = o * (c / n)
+    return {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def apply_slstm(cfg: ModelConfig, p, x, time_chunk: int = 1):
+    """x [B,S,D] -> [B,S,D]; sequential lax.scan over time.
+
+    ``time_chunk`` > 1 processes that many timesteps per scan iteration
+    (inner python-unrolled): the recurrence stays exact, but the recurrent
+    weights R are fetched from HBM once per ITERATION instead of once per
+    STEP — an HBM-traffic optimization for the memory-bound sLSTM
+    (EXPERIMENTS §Perf, xlstm plan)."""
+    B, S, D = x.shape
+    H, P = _heads(cfg)
+    wx = x @ p["W"].astype(x.dtype) + p["b"].astype(x.dtype)   # [B,S,4D]
+    state0 = slstm_state_init(cfg, B)
+    tc = max(int(time_chunk), 1)
+    assert S % tc == 0, "seq must divide the sLSTM time chunk"
+
+    def step(state, wx_ts):  # wx_ts [tc, B, 4D]
+        hs = []
+        for t in range(tc):
+            state = _slstm_step(cfg, p, wx_ts[t], state)
+            hs.append(state["h"])
+        return state, jnp.stack(hs)
+
+    xs = jnp.swapaxes(wx, 0, 1).reshape(S // tc, tc, B, 4 * D)
+    _, hs = jax.lax.scan(step, state0, xs)
+    y = jnp.swapaxes(hs.reshape(S, B, H, P), 0, 1).reshape(B, S, D).astype(x.dtype)
+    y = rmsnorm(y, p["norm"])
+    return y @ p["wo"].astype(x.dtype)
+
+
+def decode_slstm(cfg: ModelConfig, p, x, state):
+    B = x.shape[0]
+    D = cfg.d_model
+    wx = (x @ p["W"].astype(x.dtype) + p["b"].astype(x.dtype))[:, 0]
+    new = _slstm_step(cfg, p, wx, state)
+    y = new["h"].reshape(B, 1, D).astype(x.dtype)
+    y = rmsnorm(y, p["norm"])
+    return y @ p["wo"].astype(x.dtype), new

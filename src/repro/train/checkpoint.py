@@ -1,0 +1,119 @@
+"""Sharded checkpointing with mesh-shape-agnostic restore (elastic restart).
+
+Format: one ``.npz`` per save (flattened key paths) + a msgpack manifest
+with step/config. Saves run on a background thread (training continues);
+restore re-places arrays under whatever mesh/sharding the *new* job uses,
+which is what makes elastic re-scaling (e.g. 2 pods -> 1 pod after a pod
+loss) a restart rather than an outage.
+"""
+from __future__ import annotations
+
+import os
+import threading
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(jax.device_get(leaf))
+    return flat
+
+
+def _unflatten_like(template, flat: dict[str, np.ndarray]):
+    leaves_p, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves_p:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: ckpt {arr.shape} vs model {leaf.shape}")
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class Checkpointer:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    def _paths(self, step: int) -> tuple[str, str]:
+        return (os.path.join(self.dir, f"ckpt_{step:08d}.npz"),
+                os.path.join(self.dir, f"ckpt_{step:08d}.manifest"))
+
+    def save(self, step: int, state: dict[str, Any], meta: dict | None = None,
+             blocking: bool = False):
+        flat = {}
+        for name, tree in state.items():
+            for k, v in _flatten(tree).items():
+                flat[f"{name}::{k}"] = v
+
+        def _write():
+            npz_path, man_path = self._paths(step)
+            tmp = npz_path + ".tmp.npz"
+            np.savez(tmp, **flat)
+            os.replace(tmp, npz_path)
+            with open(man_path, "wb") as f:
+                f.write(msgpack.packb({"step": step, "time": time.time(),
+                                       "keys": sorted(flat.keys()), **(meta or {})}))
+            self._gc()
+
+        if blocking:
+            _write()
+        else:
+            self.wait()
+            self._thread = threading.Thread(target=_write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            for p in self._paths(s):
+                try:
+                    os.remove(p)
+                except OSError:
+                    pass
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for f in os.listdir(self.dir):
+            if f.startswith("ckpt_") and f.endswith(".manifest"):
+                out.append(int(f[5:13]))
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, step: int, templates: dict[str, Any],
+                shardings: dict[str, Any] | None = None) -> dict[str, Any]:
+        """Restore under NEW shardings (elastic restart). ``templates`` give
+        tree structure/shapes; ``shardings`` optionally re-place on a mesh."""
+        npz_path, _ = self._paths(step)
+        data = np.load(npz_path)
+        out = {}
+        for name, template in templates.items():
+            flat = {k.split("::", 1)[1]: data[k] for k in data.files
+                    if k.startswith(f"{name}::")}
+            tree = _unflatten_like(template, flat)
+            if shardings and name in shardings and shardings[name] is not None:
+                tree = jax.tree.map(
+                    lambda a, s: jax.device_put(a, s), tree, shardings[name])
+            out[name] = tree
+        return out

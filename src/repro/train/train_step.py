@@ -1,0 +1,45 @@
+"""The jitted train step: loss -> grads -> AdamW, mixed precision."""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.models.sharding import ShardCtx
+from .optimizer import AdamWConfig, OptState, adamw_update, init_opt_state
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: OptState
+
+
+def init_train_state(cfg: ModelConfig, key, V: int = 1) -> TrainState:
+    params = M.init_fn(cfg, key, V=V)
+    return TrainState(params=params, opt=init_opt_state(params))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: AdamWConfig,
+                    ctx: ShardCtx | None = None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def train_step(state: TrainState, batch):
+        def loss_of(p):
+            return M.loss_fn(cfg, p, batch, ctx)
+
+        loss, grads = jax.value_and_grad(loss_of)(state.params)
+        params, opt, metrics = adamw_update(opt_cfg, grads, state.opt, state.params)
+        metrics = {"loss": loss, **metrics}
+        return TrainState(params, opt), metrics
+
+    return train_step
+
+
+def make_eval_step(cfg: ModelConfig, ctx: ShardCtx | None = None):
+    def eval_step(params, batch):
+        return M.loss_fn(cfg, params, batch, ctx)
+    return eval_step

@@ -1,0 +1,73 @@
+"""Hierarchy: O(1) bit-label distances + adaptive imbalance (Lemma 5.1)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hierarchy import (Hierarchy, adaptive_epsilon, parse_hierarchy,
+                                  pe_distance, tpu_v5e_hierarchy)
+
+hier_st = st.lists(st.integers(2, 5), min_size=1, max_size=4).map(
+    lambda a: Hierarchy(a=tuple(a), d=tuple(float(10 ** i) for i in range(len(a)))))
+
+
+@given(hier_st)
+@settings(max_examples=25, deadline=None)
+def test_pe_distance_matches_table(h):
+    k = h.k
+    xs, ys = np.meshgrid(np.arange(k), np.arange(k), indexing="ij")
+    vec = np.asarray(pe_distance(h, jnp.asarray(xs), jnp.asarray(ys)))
+    assert np.allclose(vec, h.distance_table())
+
+
+@given(hier_st)
+@settings(max_examples=25, deadline=None)
+def test_distance_axioms(h):
+    D = h.distance_table()
+    assert np.allclose(D, D.T)                       # symmetric
+    assert np.allclose(np.diag(D), 0.0)              # identity
+    off = D[~np.eye(h.k, dtype=bool)]
+    if off.size:
+        assert (off > 0).all()                       # distinct PEs communicate
+
+
+def test_paper_example_distances():
+    # Fig 1: H = 4:2:3, D = 1:10:100
+    h = parse_hierarchy("4:2:3", "1:10:100")
+    assert h.k == 24
+    D = h.distance_table()
+    assert D[0, 1] == 1.0       # same processor
+    assert D[0, 4] == 10.0      # same node, different processor
+    assert D[0, 8] == 100.0     # different node
+
+
+def test_paper_example_adaptive_eps():
+    """§5 worked example: 800 vertices, H=4:2, eps=0.1."""
+    e_top = adaptive_epsilon(0.1, 800, 800, 8, 8, 2)
+    assert abs(e_top - (1.1 ** 0.5 - 1)) < 1e-12
+    sub_w = (1 + e_top) * 800 / 2
+    e_sub = adaptive_epsilon(0.1, 800, sub_w, 8, 4, 1)
+    assert (1 + e_sub) * sub_w / 4 <= 1.1 * 800 / 8 + 1e-9  # == L_max
+
+
+@given(st.floats(0.0, 0.5), st.integers(1, 4),
+       st.lists(st.integers(2, 4), min_size=1, max_size=4))
+@settings(max_examples=60, deadline=None)
+def test_adaptive_eps_worst_case_bounded(eps, wfac, a):
+    """Lemma 5.1: even if every level maxes out its allowance, the final
+    block weight stays <= (1+eps) * c(V)/k."""
+    h = Hierarchy(a=tuple(a), d=(1.0,) * len(a))
+    k = h.k
+    total = 1000.0 * wfac
+    Lmax = (1 + eps) * total / k
+    w = total
+    for d in range(len(a), 0, -1):
+        k_sub = int(np.prod(a[:d]))
+        e = adaptive_epsilon(eps, total, w, k, k_sub, d)
+        w = (1 + e) * w / a[d - 1]  # worst case: one block takes the max
+    assert w <= Lmax * (1 + 1e-9)
+
+
+def test_v5e_hierarchies():
+    assert tpu_v5e_hierarchy(False).k == 256
+    assert tpu_v5e_hierarchy(True).k == 512

@@ -1,0 +1,85 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core.hierarchy import Hierarchy
+from repro.core.refine import connectivity
+from repro.kernels import ops, ref
+from repro.kernels.lp_gain import lp_gain_pallas
+from repro.kernels.mapcost import mapcost_pallas
+
+
+def _edge_arrays(n, m, k, seed, dtype=jnp.float32):
+    rng = np.random.default_rng(seed)
+    rows = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    cols = jnp.asarray(rng.integers(0, n, m), jnp.int32)
+    w = jnp.asarray(rng.random(m), dtype)
+    pe = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    return rows, cols, w, pe
+
+
+@pytest.mark.parametrize("n,m", [(64, 128), (257, 1000), (1000, 5000), (4096, 2048)])
+@pytest.mark.parametrize("hier", [(4, 2), (4, 2, 3), (16, 16)])
+def test_mapcost_shapes(n, m, hier):
+    h = Hierarchy(a=hier, d=tuple(10.0 ** i for i in range(len(hier))))
+    rows, cols, w, pe = _edge_arrays(n, m, h.k, seed=n + m)
+    gb = jnp.asarray((1,) + h.strides[:-1], jnp.int32)
+    dv = jnp.asarray(h.d, jnp.float32)
+    a = ref.mapcost_ref(rows, cols, w, pe, gb, dv)
+    b = mapcost_pallas(rows, cols, w, pe, gb, dv, interpret=True)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_mapcost_dtypes(dtype):
+    h = Hierarchy(a=(4, 4), d=(1.0, 10.0))
+    rows, cols, w, pe = _edge_arrays(300, 900, h.k, seed=1, dtype=dtype)
+    gb = jnp.asarray((1,) + h.strides[:-1], jnp.int32)
+    dv = jnp.asarray(h.d, jnp.float32)
+    a = ref.mapcost_ref(rows, cols, w.astype(jnp.float32), pe, gb, dv)
+    b = mapcost_pallas(rows, cols, w.astype(jnp.float32), pe, gb, dv, interpret=True)
+    np.testing.assert_allclose(float(a), float(b), rtol=2e-3)
+
+
+@pytest.mark.parametrize("n,deg,k", [(128, 8, 4), (300, 16, 8), (1024, 32, 16), (77, 128, 3)])
+def test_lp_gain_shapes(n, deg, k):
+    rng = np.random.default_rng(n * k)
+    adj = jnp.asarray(rng.integers(0, n + 1, (n, deg)), jnp.int32)  # n == pad
+    adw = jnp.asarray(rng.random((n, deg)) * (np.asarray(adj) < n), jnp.float32)
+    part = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    c1, b1, g1 = ref.lp_gain_ref(adj, adw, part, k)
+    c2, b2, g2 = lp_gain_pallas(adj, adw, part, k, interpret=True)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-4)
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_csr_to_ell_roundtrip(seed):
+    """ELL conversion preserves per-(row, block) connectivity."""
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(10, 200))
+    g = G.gen_rgg(n, seed=seed)
+    k = int(rng.integers(2, 6))
+    part = jnp.asarray(rng.integers(0, k, g.N), jnp.int32)
+    deg = int(max(np.asarray(G.degrees(g)).max(), 1))
+    adj, adw = ref.csr_to_ell(g.rows, g.cols, g.ewgt, g.N, deg)
+    conn_ell, _, _ = ref.lp_gain_ref(adj, adw, part, k)
+    conn_csr = connectivity(g, part, k)
+    np.testing.assert_allclose(np.asarray(conn_ell), np.asarray(conn_csr), atol=1e-4)
+
+
+def test_ops_dispatch():
+    """ops.py returns identical numbers through either backend flag."""
+    h = Hierarchy(a=(4, 2), d=(1.0, 10.0))
+    rows, cols, w, pe = _edge_arrays(200, 600, h.k, seed=3)
+    gb = jnp.asarray((1,) + h.strides[:-1], jnp.int32)
+    dv = jnp.asarray(h.d, jnp.float32)
+    a = ops.mapcost(rows, cols, w, pe, gb, dv, use_pallas=False)
+    b = ops.mapcost(rows, cols, w, pe, gb, dv, use_pallas=True)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5)

@@ -1,0 +1,82 @@
+"""Mapping phase: J evaluation, greedy construction, swap refinement."""
+import itertools
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core.hierarchy import Hierarchy
+from repro.core.mapping import (evaluate_J, greedy_mapping, map_cost_dense,
+                                quotient_matrix, swap_refine)
+
+
+def _brute_force(C, D):
+    k = C.shape[0]
+    best, best_pi = np.inf, None
+    for pi in itertools.permutations(range(k)):
+        pi = np.asarray(pi)
+        c = map_cost_dense(C, D, pi)
+        if c < best:
+            best, best_pi = c, pi
+    return best, best_pi
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_greedy_plus_swaps_near_optimal_small(seed):
+    """On k=6 instances, greedy+swaps lands within 1.3x of the exact QAP
+    optimum (brute force)."""
+    h = Hierarchy(a=(3, 2), d=(1.0, 10.0))
+    k = h.k
+    rng = np.random.default_rng(seed)
+    C = rng.random((k, k)) * (rng.random((k, k)) < 0.5)
+    C = np.triu(C, 1)
+    C = C + C.T
+    D = h.distance_table()
+    opt, _ = _brute_force(C, D)
+    pi = swap_refine(C, h, greedy_mapping(C, h), seed=seed)
+    got = map_cost_dense(C, D, pi)
+    assert sorted(pi.tolist()) == list(range(k))  # a bijection
+    assert got <= 1.3 * opt + 1e-9, (got, opt)
+
+
+def test_swap_refine_never_worsens():
+    h = Hierarchy(a=(4, 4), d=(1.0, 7.0))
+    rng = np.random.default_rng(1)
+    k = h.k
+    C = rng.random((k, k))
+    C = np.triu(C, 1); C = C + C.T
+    D = h.distance_table()
+    pi0 = np.arange(k)
+    before = map_cost_dense(C, D, pi0)
+    pi1 = swap_refine(C, h, pi0, seed=2)
+    assert map_cost_dense(C, D, pi1) <= before + 1e-9
+
+
+def test_evaluate_J_matches_dense():
+    g = G.gen_rgg(400, seed=9)
+    h = Hierarchy(a=(2, 2, 2), d=(1.0, 5.0, 25.0))
+    rng = np.random.default_rng(0)
+    n = int(g.n)
+    part = rng.integers(0, h.k, n)
+    # dense path: sum over undirected edges
+    rows = np.asarray(g.rows)[: int(g.m)]
+    cols = np.asarray(g.cols)[: int(g.m)]
+    w = np.asarray(g.ewgt)[: int(g.m)]
+    D = h.distance_table()
+    expect = float((w * D[part[rows], part[cols]]).sum() / 2.0)
+    assert abs(evaluate_J(g, h, part) - expect) < 1e-3 * max(expect, 1)
+
+
+def test_quotient_matrix_symmetry_and_mass():
+    g = G.gen_grid(10)
+    n = int(g.n)
+    part = (np.arange(n) * 4) // n
+    C = quotient_matrix(g, part, 4)
+    assert np.allclose(C, C.T)
+    assert np.allclose(np.diag(C), 0.0)
+    # total cross mass equals the edge cut
+    cut = float(G.edge_cut(g, jnp.asarray(np.pad(part, (0, g.N - n)), jnp.int32)))
+    assert abs(C.sum() / 2.0 - cut) < 1e-3

@@ -1,0 +1,96 @@
+"""Mesh construction, SharedMap device ordering, HLO analyzer correctness.
+
+These run with the default single-device backend: mesh construction itself
+is exercised end-to-end by launch/dryrun.py (which forces 512 host devices
+in a separate process — see tests/test_dryrun_integration.py)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.mapping import evaluate_J
+from repro.launch.hlo_analysis import analyze_hlo, parse_computations
+from repro.launch.mesh import logical_comm_graph, physical_hierarchy
+
+
+def test_logical_comm_graph_shapes():
+    g1 = logical_comm_graph(False)
+    g2 = logical_comm_graph(True)
+    assert int(g1.n) == 256 and int(g2.n) == 512
+    # multi-pod graph has pod-crossing edges
+    assert float(g2.ewgt.sum()) > float(g1.ewgt.sum())
+
+
+def test_sharedmap_order_improves_over_random():
+    """The integration claim: SharedMap's device order has J <= a random
+    permutation's J on the physical hierarchy."""
+    from repro.launch.mesh import sharedmap_device_order
+    g = logical_comm_graph(False)
+    h = physical_hierarchy(False)
+    perm = sharedmap_device_order(False)
+    assert sorted(perm.tolist()) == list(range(256))  # a bijection
+    j_sm = evaluate_J(g, h, perm)
+    rng = np.random.default_rng(0)
+    j_rand = np.mean([evaluate_J(g, h, rng.permutation(256)) for _ in range(5)])
+    assert j_sm < j_rand, (j_sm, j_rand)
+
+
+# --- HLO analyzer ------------------------------------------------------------
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_analyzer_counts_dot_flops():
+    A = jnp.zeros((128, 256), jnp.float32)
+    B = jnp.zeros((256, 512), jnp.float32)
+    comp = _compile(lambda a, b: a @ b, A, B)
+    an = analyze_hlo(comp.as_text())
+    expect = 2 * 128 * 256 * 512
+    assert abs(an.flops - expect) / expect < 0.05, (an.flops, expect)
+
+
+def test_analyzer_scales_scan_bodies():
+    L = 7
+
+    def f(x, w):
+        def body(c, wl):
+            return jnp.tanh(c @ wl), ()
+        c, _ = jax.lax.scan(body, x, w)
+        return c
+
+    x = jnp.zeros((32, 64), jnp.float32)
+    w = jnp.zeros((L, 64, 64), jnp.float32)
+    comp = _compile(f, x, w)
+    an = analyze_hlo(comp.as_text(), trip_hints=[L])
+    expect = L * 2 * 32 * 64 * 64
+    assert abs(an.flops - expect) / expect < 0.05, (an.flops, expect)
+    assert an.while_trips == [L]
+
+
+def test_analyzer_nested_scans_multiply():
+    Lo, Li = 3, 5
+
+    def f(x, w):
+        def outer(c, wl):
+            def inner(ci, _):
+                return jnp.tanh(ci @ wl), ()
+            ci, _ = jax.lax.scan(inner, c, None, length=Li)
+            return ci, ()
+        c, _ = jax.lax.scan(outer, x, w)
+        return c
+
+    x = jnp.zeros((16, 32), jnp.float32)
+    w = jnp.zeros((Lo, 32, 32), jnp.float32)
+    comp = _compile(f, x, w)
+    an = analyze_hlo(comp.as_text(), trip_hints=[Lo, Li])
+    expect = Lo * Li * 2 * 16 * 32 * 32
+    assert abs(an.flops - expect) / expect < 0.05, (an.flops, expect)
+
+
+def test_analyzer_parses_computations():
+    comp = _compile(lambda a: (a @ a).sum(), jnp.zeros((64, 64)))
+    comps = parse_computations(comp.as_text())
+    assert any(c.is_entry for c in comps.values())
+    kinds = {op.kind for c in comps.values() for op in c.ops}
+    assert "dot" in kinds or "fusion" in kinds

@@ -1,0 +1,106 @@
+"""Hierarchical multisection: the paper's core (§4, §5) + baselines."""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.api import SharedMapConfig, shared_map
+from repro.core.baselines import (global_multisection, identity_mapping,
+                                  kaffpa_map_style, random_mapping)
+from repro.core.hierarchy import Hierarchy
+from repro.core.mapping import evaluate_J
+from repro.core.multisection import STRATEGIES, hierarchical_multisection
+
+H_PAPER = Hierarchy(a=(4, 2, 3), d=(1.0, 10.0, 100.0))  # Fig 1
+
+
+@pytest.fixture(scope="module")
+def g():
+    return G.gen_rgg(2500, seed=7)
+
+
+def _balance(g, pe_of, k, eps):
+    bw = np.bincount(pe_of, weights=np.asarray(g.vwgt)[: int(g.n)], minlength=k)
+    Lmax = (1 + eps) * float(g.total_weight()) / k
+    return bw, Lmax, bool((bw <= Lmax + 1e-4).all())
+
+
+def test_final_partition_eps_balanced(g):
+    res = shared_map(g, H_PAPER, SharedMapConfig(eps=0.03, preset="fast"))
+    bw, Lmax, ok = _balance(g, res.pe_of, H_PAPER.k, 0.03)
+    assert ok, (bw.max(), Lmax)
+    assert (bw > 0).all(), "idle PE"
+
+
+def test_beats_naive_mappings(g):
+    res = shared_map(g, H_PAPER, SharedMapConfig(eps=0.03, preset="fast"))
+    j_rand = evaluate_J(g, H_PAPER, random_mapping(g, H_PAPER))
+    j_ident = evaluate_J(g, H_PAPER, identity_mapping(g, H_PAPER))
+    assert res.J < 0.5 * j_rand
+    assert res.J < j_ident
+
+
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_all_strategies_valid(g, strategy):
+    res = shared_map(g, H_PAPER, SharedMapConfig(eps=0.03, preset="fast",
+                                                 strategy=strategy))
+    bw, Lmax, ok = _balance(g, res.pe_of, H_PAPER.k, 0.03)
+    assert ok
+
+
+def test_strategies_agree_on_quality(g):
+    js = {}
+    for s in STRATEGIES:
+        js[s] = shared_map(g, H_PAPER, SharedMapConfig(eps=0.03, preset="fast",
+                                                       strategy=s)).J
+    base = min(js.values())
+    for s, j in js.items():
+        assert j <= 1.25 * base, js  # same algorithm modulo padding effects
+
+
+def test_strategy_determinism(g):
+    a = shared_map(g, H_PAPER, SharedMapConfig(preset="fast", strategy="bucket", seed=4))
+    b = shared_map(g, H_PAPER, SharedMapConfig(preset="fast", strategy="bucket", seed=4))
+    assert np.array_equal(a.pe_of, b.pe_of)
+
+
+def test_adaptive_beats_fixed_eps_on_balance():
+    """GM (fixed eps) can exceed L_max where SharedMap cannot (paper §5/§6.4)."""
+    g = G.gen_rgg(1200, seed=3)
+    h = Hierarchy(a=(4, 4), d=(1.0, 10.0))
+    viol_adaptive = 0
+    for seed in range(3):
+        res = hierarchical_multisection(g, h, eps=0.03, preset="fast",
+                                        seed=seed, adaptive=True)
+        _, _, ok = _balance(g, res.pe_of, h.k, 0.03)
+        viol_adaptive += (not ok)
+    assert viol_adaptive == 0
+
+
+def test_kaffpa_map_style_baseline(g):
+    h = Hierarchy(a=(4, 2, 2), d=(1.0, 10.0, 100.0))  # k=16 (power of two)
+    res = kaffpa_map_style(g, h, eps=0.05, preset="fast")
+    bw, Lmax, ok = _balance(g, res.pe_of, h.k, 0.05)
+    assert ok
+    j = evaluate_J(g, h, res.pe_of)
+    j_rand = evaluate_J(g, h, random_mapping(g, h))
+    assert j < j_rand
+
+
+def test_global_multisection_baseline(g):
+    res = global_multisection(g, H_PAPER, eps=0.03, preset="fast")
+    j = evaluate_J(g, H_PAPER, res.pe_of)
+    j_rand = evaluate_J(g, H_PAPER, random_mapping(g, H_PAPER))
+    assert j < j_rand
+
+
+def test_sharedmap_quality_vs_baselines(g):
+    """The paper's mechanism claim, isolated: with EQUAL mapping-phase
+    machinery (both sides get the swap pass — our substrate partitioner is
+    weaker than KaFFPa, so unlike the paper it needs one), adaptive-eps
+    hierarchical multisection is competitive-or-better vs GM's fixed-eps.
+    The 60/40 best-solution split lives in benchmarks/quality_profiles."""
+    h = H_PAPER
+    j_sm = shared_map(g, h, SharedMapConfig(eps=0.03, preset="strong",
+                                            refine_mapping=True)).J
+    j_gm = evaluate_J(g, h, global_multisection(g, h, 0.03, "strong").pe_of)
+    assert j_sm <= 1.2 * j_gm, (j_sm, j_gm)

@@ -1,0 +1,134 @@
+"""Multilevel partitioner: balance, quality sanity, determinism."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core.coarsen import contract, hem_match
+from repro.core.graph import block_weights, edge_cut, edge_mask, vertex_mask
+from repro.core.partition import num_levels, partition_host
+from repro.core.refine import is_balanced, lp_refine, rebalance
+
+
+def _check(g, k, eps, preset="fast", salt=0):
+    part = partition_host(g, k, eps, preset, salt)
+    part_np = np.asarray(part)
+    n = int(g.n)
+    assert part_np[:n].min() >= 0 and part_np[:n].max() < k
+    Lmax = (1 + eps) * float(g.total_weight()) / k
+    bw = np.asarray(block_weights(g, part, k))
+    assert (bw <= Lmax + 1e-4).all(), f"imbalanced: {bw} vs {Lmax}"
+    assert bw.min() > 0, "empty block"
+    return part, float(edge_cut(g, part))
+
+
+def test_grid_quality():
+    g = G.gen_grid(24)
+    part, cut = _check(g, 4, 0.03, "eco")
+    # 24x24 triangulated grid, 4 quadrants: ideal cut ~ 2*24*2=96; LP-based
+    # multilevel should land well under a random partition (~ 3/4 * m/2).
+    assert cut < 350, cut
+
+
+def test_rgg_balance_many_k():
+    g = G.gen_rgg(3000, seed=1)
+    for k in (2, 5, 8, 16):
+        _check(g, k, 0.05, "fast", salt=k)
+
+
+def test_determinism():
+    g = G.gen_rgg(1500, seed=2)
+    p1, c1 = _check(g, 6, 0.03, "fast", salt=3)
+    p2, c2 = _check(g, 6, 0.03, "fast", salt=3)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert c1 == c2
+
+
+def test_k1_trivial():
+    g = G.gen_grid(8)
+    part = partition_host(g, 1, 0.03)
+    assert np.asarray(part).max() == 0
+
+
+def test_weighted_vertices_balance():
+    rng = np.random.default_rng(0)
+    side = 20
+    g0 = G.gen_grid(side)
+    vw = rng.integers(1, 10, side * side).astype(np.float64)
+    u = np.asarray(g0.rows)[: int(g0.m)]
+    v = np.asarray(g0.cols)[: int(g0.m)]
+    keep = u < v
+    g = G.from_edges(side * side, u[keep], v[keep], vwgt=vw)
+    _check(g, 4, 0.05, "eco")
+
+
+# --- coarsening invariants ---------------------------------------------------
+
+@given(st.integers(0, 1000), st.integers(20, 120))
+@settings(max_examples=20, deadline=None)
+def test_contract_invariants(seed, n):
+    rng = np.random.default_rng(seed)
+    m = max(n * 2, 4)
+    u = rng.integers(0, n, m)
+    v = rng.integers(0, n, m)
+    keep = u != v
+    if keep.sum() == 0:
+        return
+    g = G.from_edges(n, u[keep], v[keep])
+    labels = hem_match(g, rounds=2, salt=seed % 97)
+    gc, newid = contract(g, labels)
+    # vertex weight conserved
+    assert abs(float(gc.total_weight()) - float(g.total_weight())) < 1e-3
+    # edge weight: internal (within-cluster) edges removed, rest conserved
+    lab = np.asarray(labels)
+    rows = np.asarray(g.rows)[: int(g.m)]
+    cols = np.asarray(g.cols)[: int(g.m)]
+    w = np.asarray(g.ewgt)[: int(g.m)]
+    external = lab[rows] != lab[cols]
+    assert abs(float(jnp.sum(gc.ewgt)) - float(w[external].sum())) < 1e-2
+    # newid maps real vertices into [0, n_coarse)
+    nid = np.asarray(newid)[: int(g.n)]
+    assert nid.min() >= 0 and nid.max() < int(gc.n)
+
+
+def test_matching_is_valid():
+    g = G.gen_rgg(800, seed=5)
+    labels = np.asarray(hem_match(g, rounds=3, salt=1))
+    n = int(g.n)
+    for u in range(n):
+        l = labels[u]
+        assert labels[l] == l, "cluster leader must point to itself"
+    # clusters have size <= 2 (matching, not clustering)
+    _, counts = np.unique(labels[:n], return_counts=True)
+    assert counts.max() <= 2
+
+
+# --- refinement --------------------------------------------------------------
+
+def test_lp_refine_respects_capacity_and_improves():
+    g = G.gen_grid(16)
+    k, eps = 4, 0.03
+    n = int(g.n)
+    rng = np.random.default_rng(0)
+    part = jnp.asarray(rng.integers(0, k, g.N), jnp.int32)
+    Lmax = (1 + eps) * float(g.total_weight()) / k
+    part = rebalance(g, part, k, jnp.float32(Lmax), rounds=8)
+    cut0 = float(edge_cut(g, part))
+    out = lp_refine(g, part, k, jnp.float32(Lmax), rounds=6)
+    cut1 = float(edge_cut(g, out))
+    assert is_balanced(g, out, k, Lmax)
+    assert cut1 <= cut0 + 1e-6, (cut0, cut1)
+
+
+def test_rebalance_fixes_overload():
+    g = G.gen_grid(12)
+    k = 3
+    part = jnp.zeros(g.N, jnp.int32)  # everything in block 0
+    Lmax = jnp.float32(1.05 * float(g.total_weight()) / k)
+    out = rebalance(g, part, k, Lmax, rounds=12)
+    assert is_balanced(g, out, k, float(Lmax))
+
+
+def test_num_levels_monotone():
+    assert num_levels(100, 4) <= num_levels(10_000, 4) <= num_levels(1_000_000, 4)

@@ -1,0 +1,145 @@
+"""Training substrate: checkpoint/restart exactness, fault injection,
+data determinism, compression properties."""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.registry import get_smoke_config
+from repro.data.pipeline import DataConfig, host_shard, make_batch
+from repro.train.checkpoint import Checkpointer
+from repro.train.compression import (compress_with_feedback, dequantize_int8,
+                                     init_compression_state, quantize_int8,
+                                     compressed_psum)
+from repro.train.fault_tolerance import (FailureInjector, InjectedFailure,
+                                         StepWatchdog, run_with_restarts)
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import init_train_state, make_train_step
+
+CFG = get_smoke_config("llama3.2-3b")
+KEY = jax.random.PRNGKey(0)
+
+
+def test_data_pipeline_deterministic():
+    dc = DataConfig(seq_len=16, global_batch=4, seed=3)
+    a = make_batch(CFG, dc, 7)
+    b = make_batch(CFG, dc, 7)
+    c = make_batch(CFG, dc, 8)
+    assert np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(c["tokens"]))
+
+
+def test_host_shard_partitions_batch():
+    dc = DataConfig(seq_len=8, global_batch=8, seed=0)
+    b = make_batch(CFG, dc, 0)
+    parts = [host_shard(b, i, 4)["tokens"] for i in range(4)]
+    stacked = np.concatenate([np.asarray(p) for p in parts])
+    assert np.array_equal(stacked, np.asarray(b["tokens"]))
+
+
+def test_checkpoint_restart_bitwise(tmp_path):
+    """Training S steps straight == training with a crash + restore at S/2."""
+    dc = DataConfig(seq_len=16, global_batch=4, seed=1)
+    opt = AdamWConfig(lr=1e-3, total_steps=8, warmup_steps=1)
+    step_fn = jax.jit(make_train_step(CFG, opt))
+
+    def run(n_steps, state):
+        for s in range(n_steps):
+            state, _ = step_fn(state, make_batch(CFG, dc, s))
+        return state
+
+    straight = run(6, init_train_state(CFG, KEY))
+
+    ck = Checkpointer(str(tmp_path / "ck"))
+    state = init_train_state(CFG, KEY)
+    for s in range(3):
+        state, _ = step_fn(state, make_batch(CFG, dc, s))
+    ck.save(3, {"params": state.params, "opt": state.opt}, blocking=True)
+    # "crash"; restore into a fresh process-like template
+    template = init_train_state(CFG, KEY)
+    restored = ck.restore(3, {"params": template.params, "opt": template.opt})
+    state = template._replace(params=restored["params"], opt=restored["opt"])
+    for s in range(3, 6):
+        state, _ = step_fn(state, make_batch(CFG, dc, s))
+
+    for a, b in zip(jax.tree.leaves(straight.params), jax.tree.leaves(state.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpointer_gc_and_latest(tmp_path):
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = init_train_state(CFG, KEY)
+    for s in (1, 2, 3):
+        ck.save(s, {"params": state.params}, blocking=True)
+    assert ck.all_steps() == [2, 3]
+    assert ck.latest_step() == 3
+
+
+def test_failure_injection_and_restart():
+    calls = []
+
+    inj = FailureInjector(fail_at_steps=(2,))
+
+    def run(start):
+        calls.append(start)
+        for s in range(0 if start != -1 else 2, 5):
+            inj.check(s)
+        return 5
+
+    assert run_with_restarts(run, max_restarts=2) == 5
+    assert calls == [0, -1]  # one failure, one resume
+
+
+def test_watchdog_flags_stragglers():
+    wd = StepWatchdog(factor=3.0)
+    for s in range(10):
+        assert not wd.observe(s, 1.0)
+    assert wd.observe(10, 10.0)
+    assert wd.straggler_steps == [10]
+
+
+# --- compression -------------------------------------------------------------
+
+@given(st.integers(0, 1000), st.integers(1, 3000))
+@settings(max_examples=30, deadline=None)
+def test_quantize_roundtrip_bounded(seed, n):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(n) * rng.uniform(0.1, 10), jnp.float32)
+    q, s = quantize_int8(x)
+    back = dequantize_int8(q, s, x.shape)
+    err = np.abs(np.asarray(back - x))
+    # max error <= scale/2 per chunk
+    per_chunk_bound = np.repeat(np.asarray(s) / 2 + 1e-7, 2048)[: n]
+    assert (err <= per_chunk_bound + 1e-6).all()
+
+
+def test_error_feedback_telescopes():
+    """Sum of dequantized payloads + final residual == sum of raw grads."""
+    rng = np.random.default_rng(0)
+    g_total = np.zeros(1000, np.float32)
+    sent_total = np.zeros(1000, np.float32)
+    residual = jnp.zeros(1000, jnp.float32)
+    for step in range(20):
+        g = jnp.asarray(rng.standard_normal(1000), jnp.float32)
+        g_total += np.asarray(g)
+        (q, s), residual = compress_with_feedback(g, residual)
+        sent_total += np.asarray(dequantize_int8(q, s, g.shape))
+    np.testing.assert_allclose(sent_total + np.asarray(residual), g_total,
+                               atol=1e-3)
+
+
+def test_compressed_psum_mean():
+    """Across 4 simulated pods, the compressed mean tracks the true mean."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal((4, 512)), jnp.float32)
+    res = jnp.zeros((4, 512), jnp.float32)
+    out, new_res = jax.vmap(
+        lambda gi, ri: compressed_psum(gi, ri, "pods"), axis_name="pods")(g, res)
+    true_mean = np.asarray(g).mean(0)
+    np.testing.assert_allclose(np.asarray(out[0]), true_mean, atol=0.05)
+    # all pods agree on the reduced value
+    for i in range(4):
+        np.testing.assert_allclose(np.asarray(out[i]), np.asarray(out[0]), atol=1e-6)

@@ -15,12 +15,18 @@ section maps to a paper artifact (DESIGN.md §8):
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
 import numpy as np
 
 ROWS: list[tuple[str, float, str]] = []
+
+# structured telemetry merged into BENCH_PR3.json at exit (perf trajectory
+# tracking from PR 3 onward: strategy wall times, partition_calls,
+# padded-vs-real vertex work, compile-cache hits, map costs).
+BENCH: dict = {"sections": {}}
 
 
 def emit(name: str, us: float, derived: str = ""):
@@ -84,16 +90,35 @@ def bench_thread_strategies(scale: str, quick: bool):
     import jax
     h = Hierarchy(a=(4, 8, 2), d=(1.0, 10.0, 100.0))
     strategies = ["naive", "layer", "bucket", "queue"]
+    from repro.core.multisection import clear_compile_cache
+    section = BENCH["sections"].setdefault("thread_strategies", {})
     for gname, g in instances(scale):
         jax.clear_caches()
+        clear_compile_cache()
         times = {}
+        reps = 3  # min-of-reps: wall clock on shared/throttled hosts is noisy
         for s in strategies:
             shared_map(g, h, SharedMapConfig(preset="fast", strategy=s))  # warm
-            t0 = time.time()
-            res = shared_map(g, h, SharedMapConfig(preset="fast", strategy=s))
-            times[s] = time.time() - t0
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.time()
+                res = shared_map(g, h, SharedMapConfig(preset="fast", strategy=s))
+                best = min(best, time.time() - t0)
+            times[s] = best
             waste = res.stats["padded_vertex_work"] / max(res.stats["real_vertex_work"], 1)
-            emit(f"strategy/{s}/{gname}", times[s] * 1e6, f"padwaste={waste:.2f}")
+            cc = res.stats["compile_cache"]
+            emit(f"strategy/{s}/{gname}", times[s] * 1e6,
+                 f"padwaste={waste:.2f} cache={cc['hits']}h/{cc['misses']}m")
+            section[f"{s}/{gname}"] = {
+                "wall_s": times[s],
+                "J": res.J,
+                "partition_calls": res.stats["partition_calls"],
+                "padded_vertex_work": res.stats["padded_vertex_work"],
+                "real_vertex_work": res.stats["real_vertex_work"],
+                "compile_cache_hits": cc["hits"],
+                "compile_cache_misses": cc["misses"],
+                "backend": res.stats["backend"],
+            }
         base = times["layer"]
         for s in strategies:
             emit(f"strategy_speedup_vs_layer/{s}/{gname}", times[s] * 1e6,
@@ -163,12 +188,38 @@ def bench_mapping_vs_default(scale: str, quick: bool):
              f"J={j_sm:.0f} default={j_def:.0f} random={j_rnd:.0f}")
 
 
+def bench_refine_backends(scale: str, quick: bool):
+    """ELL/Pallas-backed refinement vs the seed XLA scatter path: final
+    edge-cut parity and wall time of whole partition calls."""
+    import jax
+    from benchmarks.instances import instances
+    from repro.core.graph import edge_cut
+    from repro.core.partition import partition_host
+
+    section = BENCH["sections"].setdefault("refine_backends", {})
+    for gname, g in instances(scale):
+        row = {}
+        for be in ("xla", "ell"):
+            jax.block_until_ready(partition_host(g, 8, 0.03, "fast", salt=1, backend=be))  # warm
+            dt = float("inf")
+            for _ in range(3):  # min-of-reps (noisy shared host)
+                t0 = time.time()
+                part = jax.block_until_ready(partition_host(g, 8, 0.03, "fast", salt=1, backend=be))
+                dt = min(dt, time.time() - t0)
+            cut = float(edge_cut(g, part))
+            row[be] = {"wall_s": dt, "edge_cut": cut}
+            emit(f"refine_backend/{be}/{gname}", dt * 1e6, f"cut={cut:.0f}")
+        section[gname] = row
+        if quick:
+            break
+
+
 def bench_kernels(scale: str, quick: bool):
     import jax
     import jax.numpy as jnp
     from repro.core import graph as G
     from repro.core.hierarchy import Hierarchy
-    from repro.kernels import ref
+    from repro.kernels import ops, ref
 
     g = G.gen_rgg(20_000, seed=0)
     h = Hierarchy(a=(16, 16), d=(1.0, 10.0))
@@ -194,6 +245,18 @@ def bench_kernels(scale: str, quick: bool):
         jax.block_until_ready(f2())
     us = (time.time() - t0) / 10 * 1e6
     emit("kernel/lp_gain_ref_20k", us, f"vertices_per_s={int(g.n)/(us/1e6):.2e}")
+    BENCH["sections"].setdefault("kernels", {})["lp_gain_ref_20k_us"] = us
+
+    # mapcost through the single dispatch helper (pallas on TPU, oracle here)
+    f3 = jax.jit(lambda: ops.mapcost(g.rows, g.cols, g.ewgt, pe, gb, dv))
+    jax.block_until_ready(f3())
+    t0 = time.time()
+    for _ in range(10):
+        jax.block_until_ready(f3())
+    us = (time.time() - t0) / 10 * 1e6
+    emit("kernel/mapcost_dispatch_20k", us, f"backend={ops.kernel_backend()}")
+    BENCH["sections"]["kernels"]["mapcost_dispatch_20k_us"] = us
+    BENCH["sections"]["kernels"]["backend"] = ops.kernel_backend()
 
 
 SECTIONS = {
@@ -202,6 +265,7 @@ SECTIONS = {
     "presets": bench_presets,
     "scalability": bench_scalability,
     "mapping_vs_default": bench_mapping_vs_default,
+    "refine_backends": bench_refine_backends,
     "kernels": bench_kernels,
 }
 
@@ -210,20 +274,55 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--scale", choices=["small", "large", "paper"], default="small")
-    ap.add_argument("--only", choices=list(SECTIONS), default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SECTIONS))
+    ap.add_argument("--out", default="BENCH_PR3.json",
+                    help="telemetry JSON path ('' disables)")
     args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    if only and not only <= set(SECTIONS):
+        ap.error(f"unknown sections: {sorted(only - set(SECTIONS))}")
     print("name,us_per_call,derived")
+    rows_by_section: dict[str, list] = {}
     for name, fn in SECTIONS.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         print(f"# --- {name} ---", flush=True)
         t0 = time.time()
+        row_mark = len(ROWS)
         fn(args.scale, args.quick)
+        rows_by_section[name] = [
+            {"name": n, "us": u, "derived": d} for n, u, d in ROWS[row_mark:]
+        ]
         print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
         # each section compiles many (shape x k x preset) programs; drop the
-        # executable cache so a long full run stays within host RAM.
+        # jit caches so a long full run stays within host RAM, and the
+        # multisection memo/telemetry with them (its compiled executables
+        # live inside those jit caches, so hits after a clear would lie).
         import jax
+        from repro.core.multisection import clear_compile_cache
         jax.clear_caches()
+        clear_compile_cache()
+    if args.out:
+        # merge into an existing telemetry file: a partial --only run must
+        # not wipe the other sections' trajectory data.
+        merged = {"sections": {}}
+        try:
+            with open(args.out) as f:
+                merged = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            pass
+        merged.setdefault("sections", {}).update(BENCH["sections"])
+        merged["argv"] = sys.argv[1:]
+        # rows are merged per section, like sections: a partial run only
+        # replaces the rows of the sections it actually ran.
+        rows = merged.setdefault("rows", {})
+        if isinstance(rows, list):  # pre-merge flat format
+            rows = merged["rows"] = {}
+        rows.update(rows_by_section)
+        with open(args.out, "w") as f:
+            json.dump(merged, f, indent=2)
+        print(f"# telemetry -> {args.out}", flush=True)
 
 
 if __name__ == "__main__":

@@ -24,6 +24,9 @@ class SharedMapConfig:
     strategy: str = "bucket"     # naive | layer | bucket | queue
     seed: int = 0
     adaptive: bool = True        # Lemma 5.1 adaptive imbalance
+    backend: str = "auto"        # refinement kernels: auto | ell | xla
+    # ("ell" = Pallas lp_gain kernels over the padded [N, DEG] adjacency;
+    #  "auto" picks it whenever kernels.ops.kernel_backend() is live.)
     refine_mapping: bool = False  # optional block<->PE swap pass. The paper's
     # SharedMap deliberately has none (§6.4) — with a KaFFPa-strength
     # partitioner it is unnecessary. Our JAX substrate partitioner is weaker,
@@ -43,7 +46,7 @@ def shared_map(g: Graph, h: Hierarchy, config: SharedMapConfig | None = None) ->
     cfg = config or SharedMapConfig()
     res = hierarchical_multisection(
         g, h, eps=cfg.eps, preset=cfg.preset, strategy=cfg.strategy,
-        seed=cfg.seed, adaptive=cfg.adaptive,
+        seed=cfg.seed, adaptive=cfg.adaptive, backend=cfg.backend,
     )
     if cfg.refine_mapping:
         from .mapping import quotient_matrix, swap_refine

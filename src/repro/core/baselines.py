@@ -17,7 +17,7 @@ import numpy as np
 
 from .graph import Graph
 from .hierarchy import Hierarchy
-from .mapping import greedy_mapping, quotient_matrix, swap_refine
+from .mapping import evaluate_J, greedy_mapping, quotient_matrix, swap_refine
 from .multisection import MultisectionResult, hierarchical_multisection
 
 
@@ -38,22 +38,25 @@ def random_mapping(g: Graph, h: Hierarchy, seed: int = 0) -> np.ndarray:
 
 def global_multisection(
     g: Graph, h: Hierarchy, eps: float = 0.03, preset: str = "eco",
-    strategy: str = "bucket", seed: int = 0,
+    strategy: str = "bucket", seed: int = 0, backend: str = "auto",
 ) -> MultisectionResult:
     """GM [42]: multisection with FIXED eps per level + swap refinement."""
     res = hierarchical_multisection(
-        g, h, eps=eps, preset=preset, strategy=strategy, seed=seed, adaptive=False
+        g, h, eps=eps, preset=preset, strategy=strategy, seed=seed,
+        adaptive=False, backend=backend,
     )
+    res.stats["J_before_refine"] = evaluate_J(g, h, res.pe_of)
     C = quotient_matrix(g, res.pe_of, h.k)
     pe_perm = swap_refine(C, h, np.arange(h.k, dtype=np.int64), seed=seed)
     res.pe_of = pe_perm[res.pe_of]
     res.stats["refined"] = True
+    res.stats["J_after_refine"] = evaluate_J(g, h, res.pe_of)
     return res
 
 
 def kaffpa_map_style(
     g: Graph, h: Hierarchy, eps: float = 0.03, preset: str = "eco",
-    strategy: str = "bucket", seed: int = 0,
+    strategy: str = "bucket", seed: int = 0, backend: str = "auto",
 ) -> MultisectionResult:
     """KAFFPA-MAP [38]: flat k-way first, then map the quotient graph."""
     k = h.k
@@ -63,7 +66,8 @@ def kaffpa_map_style(
     # phase 1: recursive bisection == multisection over H=(2,)*log2(k)
     rb = Hierarchy(a=(2,) * int(lg), d=(1.0,) * int(lg))
     res = hierarchical_multisection(
-        g, rb, eps=eps, preset=preset, strategy=strategy, seed=seed, adaptive=True
+        g, rb, eps=eps, preset=preset, strategy=strategy, seed=seed,
+        adaptive=True, backend=backend,
     )
     part = res.pe_of  # k-way partition (block ids)
     # phase 2: hierarchical multisection of G_M (k vertices) -> greedy -> swap
@@ -72,4 +76,5 @@ def kaffpa_map_style(
     pe_perm = swap_refine(C, h, pe_perm, seed=seed)
     res.pe_of = pe_perm[part]
     res.stats["refined"] = True
+    res.stats["J_after_refine"] = evaluate_J(g, h, res.pe_of)
     return res

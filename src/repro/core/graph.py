@@ -11,6 +11,23 @@ Conventions
 * Every undirected edge {u, v} is stored twice (u->v and v->u).
 * Edge slots ``m .. M-1`` are padding: ``rows == cols == n_pad_anchor`` and
   ``ewgt == 0`` so they are harmless under segment reductions.
+* ``rows`` is sorted ascending over the real slots and ``indptr`` is the
+  exact CSR prefix over them (``indptr[r]`` = first edge of row ``r``;
+  rows >= the real vertex count all point at ``m``). Every constructor in
+  this repo funnels through :func:`padded_csr_indptr` /
+  :func:`assemble_padded` so the invariant holds at all hierarchy levels.
+
+ELL adjacency (kernel layout)
+-----------------------------
+:func:`ell_adjacency` derives a padded ``[N, DEG]`` neighbour/weight matrix
+pair from the CSR arrays for the Pallas refinement kernels
+(``kernels/lp_gain.py``). ``DEG`` is a *static* degree cap chosen host-side
+(:func:`default_ell_deg`: twice the mean directed degree, rounded up to a
+multiple of 8, clamped to ``ELL_DEG_CAP``). Rows with more than ``DEG``
+neighbours are reported in an ``overflow`` mask; callers pick the policy
+(the kernel-backed refiner freezes overflow rows so truncated gains can
+never admit a bad move; the rebalancer keeps them movable since balance
+only needs the exact weight bookkeeping — see ``core/refine.py``).
 """
 from __future__ import annotations
 
@@ -45,6 +62,58 @@ class Graph(NamedTuple):
         return jnp.sum(self.vwgt)
 
 
+def padded_csr_indptr(rows: np.ndarray, m: int, N: int) -> np.ndarray:
+    """[N+1] exact CSR prefix over the sorted real directed rows ``rows[:m]``.
+
+    Rows with no edges (including every padding row >= the real vertex
+    count) get an empty range; since counts sum to ``m``, all trailing
+    entries equal ``m`` — no clamping needed (the old ``np.minimum(indptr,
+    m)`` clamp silently flattened offsets whenever a caller passed rows that
+    were not already consistent with ``m``).
+    """
+    counts = np.bincount(np.asarray(rows[:m], np.int64), minlength=N)
+    indptr = np.zeros(N + 1, np.int64)
+    np.cumsum(counts, out=indptr[1:])
+    return indptr
+
+
+def assemble_padded(
+    vwgt: np.ndarray,
+    rows: np.ndarray,
+    cols: np.ndarray,
+    ewgt: np.ndarray,
+    n: int,
+    N: int,
+    M: int,
+) -> Graph:
+    """Assemble a device `Graph` from REAL (unpadded) host arrays.
+
+    ``rows`` must be sorted ascending; one host->device transfer per field.
+    This is the single construction path shared by `from_edges`,
+    `pad_graph` and the multisection subgraph extractor.
+    """
+    m = int(np.asarray(rows).shape[0])
+    if N < n or M < m:
+        raise ValueError(f"padding too small: N={N}<{n} or M={M}<{m}")
+    r = np.full(M, N - 1, np.int32)
+    c = np.full(M, N - 1, np.int32)
+    w = np.zeros(M, np.float32)
+    r[:m] = rows
+    c[:m] = cols
+    w[:m] = ewgt
+    vw = np.zeros(N, np.float32)
+    vw[:n] = vwgt
+    return Graph(
+        vwgt=jnp.asarray(vw),
+        rows=jnp.asarray(r),
+        cols=jnp.asarray(c),
+        ewgt=jnp.asarray(w),
+        indptr=jnp.asarray(padded_csr_indptr(r, m, N), jnp.int32),
+        n=jnp.asarray(n, jnp.int32),
+        m=jnp.asarray(m, jnp.int32),
+    )
+
+
 def from_edges(
     n: int,
     u: np.ndarray,
@@ -73,38 +142,9 @@ def from_edges(
 
     N = int(N if N is not None else n)
     M = int(M if M is not None else max(m, 1))
-    if N < n or M < m:
-        raise ValueError(f"padding too small: N={N}<{n} or M={M}<{m}")
 
     order = np.argsort(du, kind="stable")
-    du, dv, dw = du[order], dv[order], dw[order]
-
-    rows = np.full(M, N - 1, np.int32)
-    cols = np.full(M, N - 1, np.int32)
-    ewgt = np.zeros(M, np.float64)
-    rows[:m] = du
-    cols[:m] = dv
-    ewgt[:m] = dw
-
-    counts = np.bincount(du, minlength=N).astype(np.int64)
-    indptr = np.zeros(N + 1, np.int64)
-    np.cumsum(counts, out=indptr[1:])
-    # padding rows all point at the tail
-    indptr = np.minimum(indptr, m)
-    indptr[-1] = m  # real edges end at m; padded edge slots live beyond
-
-    vw = np.zeros(N, np.float64)
-    vw[:n] = vwgt_np
-
-    return Graph(
-        vwgt=jnp.asarray(vw, jnp.float32),
-        rows=jnp.asarray(rows, jnp.int32),
-        cols=jnp.asarray(cols, jnp.int32),
-        ewgt=jnp.asarray(ewgt, jnp.float32),
-        indptr=jnp.asarray(indptr, jnp.int32),
-        n=jnp.asarray(n, jnp.int32),
-        m=jnp.asarray(m, jnp.int32),
-    )
+    return assemble_padded(vwgt_np, du[order], dv[order], dw[order], n, N, M)
 
 
 def edge_mask(g: Graph) -> jax.Array:
@@ -238,29 +278,64 @@ def pad_graph(g: Graph, N: int, M: int) -> Graph:
     """Host-side re-pad to (N, M) >= current real sizes."""
     n = int(g.n)
     m = int(g.m)
-    if N < n or M < m:
-        raise ValueError("pad_graph target smaller than real size")
-    vwgt = np.zeros(N, np.float32)
-    vwgt[: g.N][: min(g.N, N)] = np.asarray(g.vwgt)[: min(g.N, N)]
-    rows = np.full(M, N - 1, np.int32)
-    cols = np.full(M, N - 1, np.int32)
-    ewgt = np.zeros(M, np.float32)
-    rows[:m] = np.asarray(g.rows)[:m]
-    cols[:m] = np.asarray(g.cols)[:m]
-    ewgt[:m] = np.asarray(g.ewgt)[:m]
-    indptr_old = np.asarray(g.indptr)
-    indptr = np.zeros(N + 1, np.int32)
-    indptr[: min(g.N + 1, N + 1)] = indptr_old[: min(g.N + 1, N + 1)]
-    indptr[min(g.N + 1, N + 1):] = m
-    return Graph(
-        vwgt=jnp.asarray(vwgt),
-        rows=jnp.asarray(rows),
-        cols=jnp.asarray(cols),
-        ewgt=jnp.asarray(ewgt),
-        indptr=jnp.asarray(indptr),
-        n=jnp.asarray(n, jnp.int32),
-        m=jnp.asarray(m, jnp.int32),
+    return assemble_padded(
+        np.asarray(g.vwgt)[:n],
+        np.asarray(g.rows)[:m],
+        np.asarray(g.cols)[:m],
+        np.asarray(g.ewgt)[:m],
+        n, N, M,
     )
+
+
+# ---------------------------------------------------------------------------
+# ELL adjacency (the Pallas refinement-kernel layout)
+# ---------------------------------------------------------------------------
+
+ELL_DEG_CAP = 64  # hard cap on the static neighbour-matrix width
+
+
+def default_ell_deg(N: int, M: int, cap: int = ELL_DEG_CAP) -> int:
+    """Static degree cap for the [N, DEG] ELL layout.
+
+    Twice the mean directed degree, rounded up to a multiple of 8 (VREG
+    sublane alignment), clamped to ``[8, cap]``. Mesh-like instances (the
+    paper's main families, max degree ~8) fit entirely; power-law tails
+    exceed it and land in the overflow mask.
+    """
+    avg = (M + max(N, 1) - 1) // max(N, 1)
+    return int(min(cap, max(8, ((2 * avg + 7) // 8) * 8)))
+
+
+def ell_adjacency(g: Graph, deg: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """CSR -> padded ELL, jit-compatible (``deg`` static).
+
+    Returns ``(adj [N, deg], adw [N, deg], overflow [N])`` where ``adj``
+    holds neighbour ids (padding slots = N, matching the lp_gain kernel's
+    pad convention), ``adw`` the edge weights (0 on padding), and
+    ``overflow[u]`` flags vertices whose degree exceeds ``deg`` (their ELL
+    row is truncated to the first ``deg`` CSR neighbours).
+
+    Relies on the Graph invariant that ``rows`` is sorted and ``indptr`` is
+    its exact prefix, so each edge's within-row position is
+    ``index - indptr[row]`` — no argsort needed (cf. ref.csr_to_ell).
+    """
+    N, M = g.N, g.M
+    idx = jnp.arange(M, dtype=jnp.int32)
+    emask = idx < g.m
+    r = jnp.clip(g.rows, 0, N - 1)
+    pos = idx - g.indptr[r]
+    valid = emask & (pos >= 0) & (pos < deg)
+    slot = jnp.where(valid, r * deg + pos, N * deg)  # N*deg = trimmed slot
+    adj = (
+        jnp.full((N * deg + 1,), N, jnp.int32)
+        .at[slot].set(jnp.where(valid, g.cols, N), mode="drop")[:-1]
+    )
+    adw = (
+        jnp.zeros((N * deg + 1,), g.ewgt.dtype)
+        .at[slot].set(jnp.where(valid, g.ewgt, 0.0), mode="drop")[:-1]
+    )
+    overflow = (g.indptr[1:] - g.indptr[:-1]) > deg
+    return adj.reshape(N, deg), adw.reshape(N, deg), overflow
 
 
 @functools.partial(jax.jit, static_argnames=("num_blocks",))

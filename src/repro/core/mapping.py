@@ -20,15 +20,25 @@ import jax.numpy as jnp
 
 from .graph import Graph, edge_mask
 from .hierarchy import Hierarchy, mapping_cost, pe_distance
+from ..kernels import ops as kops
 
 
-def evaluate_J(g: Graph, h: Hierarchy, pe_of: np.ndarray) -> float:
-    """Total communication cost J(C, D, Pi) of a vertex->PE assignment."""
+def evaluate_J(g: Graph, h: Hierarchy, pe_of: np.ndarray,
+               use_pallas: bool | None = None) -> float:
+    """Total communication cost J(C, D, Pi) of a vertex->PE assignment.
+
+    Dispatches through ``kernels.ops.mapcost`` — the Pallas edge-tiled
+    kernel when live (TPU / forced interpret), the jitted jnp oracle
+    otherwise. Padded edge slots carry weight 0, so no mask is needed.
+    """
     pe = jnp.asarray(np.asarray(pe_of), jnp.int32)
     pad = jnp.zeros(g.N - pe.shape[0], jnp.int32) if pe.shape[0] < g.N else None
     if pad is not None:
         pe = jnp.concatenate([pe, pad])
-    return float(mapping_cost(h, g.rows, g.cols, g.ewgt, pe, edge_mask(g)))
+    g_below = jnp.asarray((1,) + h.strides[:-1], jnp.int32)
+    dvec = jnp.asarray(h.d, jnp.float32)
+    return float(kops.mapcost(g.rows, g.cols, g.ewgt, pe, g_below, dvec,
+                              use_pallas=use_pallas))
 
 
 def quotient_matrix(g: Graph, part: np.ndarray, k: int) -> np.ndarray:

@@ -16,13 +16,35 @@ Scheduling strategies (§4.2-4.5), adapted from C++ threads to JAX/XLA:
                 grouped into power-of-two size buckets; each bucket is its
                 own vmapped program, so small subgraphs do not pay the
                 padding (idle-lane) cost of the largest one.
-* ``queue``   — the PRIORITY QUEUE analogue: a host-side master thread pops
-                the largest pending subgraph and dispatches its partition
-                call to a worker pool (XLA dispatch is asynchronous).
-                Paper: Algorithm 2.
+* ``queue``   — the PRIORITY QUEUE analogue: worker threads pop the largest
+                pending subgraph from a condition-variable-guarded heap and
+                dispatch its partition call (XLA dispatch is asynchronous,
+                so one worker's host-side subgraph extraction overlaps
+                another's device compute). Paper: Algorithm 2.
+
+Compile-cache policy
+--------------------
+Single-subgraph calls go straight to the jitted ``partition`` (its jit
+cache is keyed by the static ``(k, levels, preset, backend, ell_deg)``
+plus the padded ``(N, M)`` shapes); bucket calls go through
+:func:`_batched_partition`, a process-wide memo of jitted vmapped wrappers
+keyed by ``(k, levels, preset, backend, ell_deg)`` — the seed rebuilt a
+``jax.vmap(lambda ...)`` per bucket per level, paying a full retrace per
+call. Both paths are shared across hierarchy levels, strategies and
+`hierarchical_multisection` calls. :func:`_note_program` tracks every
+distinct XLA program key ``(N, M, batch, k, levels, preset, backend,
+ell_deg)``:
+first sighting in the process = compile (miss), later sightings = reuse
+(hit); per-run counts land in ``stats["compile_cache"]``.
+
+Device-transfer policy: each bucket's members are stacked host-side into
+one ``[B, ...]`` numpy buffer per Graph field and shipped with a single
+transfer per field (the seed did one transfer per field PER MEMBER).
 
 All strategies use salts derived from the subgraph's position in the
-hierarchy (not traversal order), so results are reproducible per strategy.
+hierarchy (not traversal order), so results are reproducible per strategy
+— and identical ACROSS strategies up to padding effects (`queue` and
+`naive` pad identically, so they produce bit-equal mappings).
 """
 from __future__ import annotations
 
@@ -36,9 +58,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import Graph
+from .graph import Graph, assemble_padded, default_ell_deg, padded_csr_indptr
 from .hierarchy import Hierarchy, adaptive_epsilon
 from .partition import num_levels, partition
+from .refine import resolve_backend
 
 
 # ---------------------------------------------------------------------------
@@ -71,26 +94,40 @@ class _HostGraph:
         return self.rows.shape[0]
 
     def to_device(self, N: int, M: int) -> Graph:
-        rows = np.full(M, N - 1, np.int32)
-        cols = np.full(M, N - 1, np.int32)
-        ewgt = np.zeros(M, np.float32)
-        rows[: self.m] = self.rows
-        cols[: self.m] = self.cols
-        ewgt[: self.m] = self.ewgt
-        vwgt = np.zeros(N, np.float32)
-        vwgt[: self.n] = self.vwgt
-        counts = np.bincount(self.rows, minlength=N)
-        indptr = np.zeros(N + 1, np.int64)
-        np.cumsum(counts, out=indptr[1:])
-        return Graph(
-            vwgt=jnp.asarray(vwgt),
-            rows=jnp.asarray(rows),
-            cols=jnp.asarray(cols),
-            ewgt=jnp.asarray(ewgt),
-            indptr=jnp.asarray(np.minimum(indptr, self.m), jnp.int32),
-            n=jnp.asarray(self.n, jnp.int32),
-            m=jnp.asarray(self.m, jnp.int32),
-        )
+        """Padded device Graph via the shared CSR builder (exact indptr)."""
+        return assemble_padded(self.vwgt, self.rows, self.cols, self.ewgt,
+                               self.n, N, M)
+
+
+def _stack_to_device(members: list[_HostGraph], N: int, M: int) -> Graph:
+    """Batched [B, ...] Graph for a bucket — ONE host->device transfer per
+    field instead of one per member per field."""
+    B = len(members)
+    vwgt = np.zeros((B, N), np.float32)
+    rows = np.full((B, M), N - 1, np.int32)
+    cols = np.full((B, M), N - 1, np.int32)
+    ewgt = np.zeros((B, M), np.float32)
+    indptr = np.zeros((B, N + 1), np.int32)
+    ns = np.zeros((B,), np.int32)
+    ms = np.zeros((B,), np.int32)
+    for i, hg in enumerate(members):
+        m = hg.m
+        vwgt[i, : hg.n] = hg.vwgt
+        rows[i, :m] = hg.rows
+        cols[i, :m] = hg.cols
+        ewgt[i, :m] = hg.ewgt
+        indptr[i] = padded_csr_indptr(rows[i], m, N)
+        ns[i] = hg.n
+        ms[i] = m
+    return Graph(
+        vwgt=jnp.asarray(vwgt),
+        rows=jnp.asarray(rows),
+        cols=jnp.asarray(cols),
+        ewgt=jnp.asarray(ewgt),
+        indptr=jnp.asarray(indptr),
+        n=jnp.asarray(ns),
+        m=jnp.asarray(ms),
+    )
 
 
 def host_graph_from(g: Graph) -> _HostGraph:
@@ -134,6 +171,77 @@ def _split(hg: _HostGraph, part: np.ndarray, k: int, child_depth: int,
 
 
 # ---------------------------------------------------------------------------
+# the compiled-callable cache
+# ---------------------------------------------------------------------------
+
+_VMAP_CACHE: dict[tuple, Callable] = {}  # (k, levels, preset, backend, deg) -> jitted
+_SEEN_SHAPES: set[tuple] = set()         # program keys ever compiled
+_EXEC_LOCK = threading.Lock()
+
+
+def _ell_deg_for(members, backend: str) -> int | None:
+    """Static ELL degree cap for a dispatch, from the REAL mean directed
+    degree of the member subgraphs (pow2-padded shapes skew the in-jit
+    default by up to 2x — see core/refine.py). None when the xla backend
+    doesn't need it (avoids fragmenting the jit cache key)."""
+    if backend != "ell":
+        return None
+    mean = max((m.m + max(m.n, 1) - 1) // max(m.n, 1) for m in members)
+    return default_ell_deg(1, mean)  # N=1, M=mean -> cap from the real mean
+
+
+def _batched_partition(k: int, levels: int, preset: str, backend: str,
+                       ell_deg: int | None) -> Callable:
+    """Memoized jitted vmapped partition callable.
+
+    The seed rebuilt ``jax.vmap(lambda ...)`` per bucket per level — a full
+    retrace per call. The memoized jitted wrapper hits jit's C++ fast path
+    on every repeat call with the same shapes (an AOT ``.lower().compile()``
+    executable was measured SLOWER here: its Python ``Compiled.__call__``
+    costs more than jit dispatch).
+    """
+    key = (k, levels, preset, backend, ell_deg)
+    with _EXEC_LOCK:
+        fn = _VMAP_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(lambda gs, ee, ss: jax.vmap(
+                lambda g1, e1, s1: partition(g1, k, e1, levels, preset, s1,
+                                             backend, ell_deg)
+            )(gs, ee, ss))
+            _VMAP_CACHE[key] = fn
+    return fn
+
+
+def _note_program(N: int, M: int, batch: int, k: int, levels: int, preset: str,
+                  backend: str, ell_deg: int | None, cache_stats: dict) -> None:
+    """Track XLA program reuse: the first sighting of a program key in the
+    process is a compile (miss), every later one a cache hit."""
+    key = (N, M, batch, k, levels, preset, backend, ell_deg)
+    with _EXEC_LOCK:
+        hit = key in _SEEN_SHAPES
+        _SEEN_SHAPES.add(key)
+        # increment inside the lock: queue workers call this concurrently
+        cache_stats["hits" if hit else "misses"] += 1
+
+
+def compile_cache_size() -> int:
+    with _EXEC_LOCK:
+        return len(_SEEN_SHAPES)
+
+
+def clear_compile_cache() -> None:
+    """Drop the memoized callables AND the program-sighting telemetry.
+
+    Call alongside ``jax.clear_caches()`` — that drops the compiled
+    executables inside the memoized jit wrappers, so keeping
+    ``_SEEN_SHAPES`` would report 'hits' for programs XLA must recompile.
+    """
+    with _EXEC_LOCK:
+        _VMAP_CACHE.clear()
+        _SEEN_SHAPES.clear()
+
+
+# ---------------------------------------------------------------------------
 # the multisection driver
 # ---------------------------------------------------------------------------
 
@@ -156,12 +264,16 @@ def _eps_for(hg: _HostGraph, h: Hierarchy, eps: float, total_weight: float,
 
 
 def _partition_one(hg: _HostGraph, k: int, eps_val: float, preset: str,
-                   salt: int, pad_n: int | None = None, pad_m: int | None = None) -> np.ndarray:
+                   salt: int, backend: str, cache_stats: dict,
+                   pad_n: int | None = None, pad_m: int | None = None) -> np.ndarray:
     N = pad_n or _next_pow2(hg.n)
     M = pad_m or _next_pow2(max(hg.m, 1))
-    g = hg.to_device(N, M)
     lv = num_levels(N, k)
-    part = partition(g, k, jnp.float32(eps_val), lv, preset, salt)
+    deg = _ell_deg_for([hg], backend)
+    _note_program(N, M, 0, k, lv, preset, backend, deg, cache_stats)
+    g = hg.to_device(N, M)
+    part = partition(g, k, jnp.float32(eps_val), lv, preset, jnp.int32(salt),
+                     backend, deg)
     return np.asarray(part)[: hg.n]
 
 
@@ -173,20 +285,28 @@ def hierarchical_multisection(
     strategy: str = "bucket",
     seed: int = 0,
     adaptive: bool = True,
+    backend: str = "auto",
 ) -> MultisectionResult:
     """Partition ``g`` along ``h`` and return the (identity) mapping."""
+    backend = resolve_backend(backend)
     root = host_graph_from(g)
     root.depth = h.l
     total_weight = float(root.vwgt.sum())
-    strides = (1,) + h.strides  # strides[d] = PEs under one depth-d block
     pe_of = np.zeros(root.n, np.int64)
     stats = {"partition_calls": 0, "levels": [], "strategy": strategy,
-             "padded_vertex_work": 0, "real_vertex_work": 0}
+             "padded_vertex_work": 0, "real_vertex_work": 0,
+             "backend": backend,
+             "compile_cache": {"hits": 0, "misses": 0}}
+    cache_stats = stats["compile_cache"]
+    rec_lock = threading.Lock()
 
     def record(batchN, realn):
-        stats["padded_vertex_work"] += int(batchN)
-        stats["real_vertex_work"] += int(realn)
+        with rec_lock:
+            stats["partition_calls"] += 1
+            stats["padded_vertex_work"] += int(batchN)
+            stats["real_vertex_work"] += int(realn)
 
+    ctx = (h, eps, preset, seed, total_weight, adaptive, backend, record, cache_stats)
     current = [root]
     t0 = time.time()
     while current:
@@ -199,16 +319,15 @@ def hierarchical_multisection(
             break
         lvl_t0 = time.time()
         if strategy == "naive":
-            produced = _run_naive(work, h, eps, preset, seed, total_weight, adaptive, record)
+            produced = _run_naive(work, ctx)
         elif strategy == "layer":
-            produced = _run_layer(work, h, eps, preset, seed, total_weight, adaptive, record, bucketed=False)
+            produced = _run_layer(work, ctx, bucketed=False)
         elif strategy == "bucket":
-            produced = _run_layer(work, h, eps, preset, seed, total_weight, adaptive, record, bucketed=True)
+            produced = _run_layer(work, ctx, bucketed=True)
         elif strategy == "queue":
-            produced = _run_queue(work, h, eps, preset, seed, total_weight, adaptive, record)
+            produced = _run_queue(work, ctx)
         else:
             raise ValueError(f"unknown strategy {strategy!r}")
-        stats["partition_calls"] += len(work)
         stats["levels"].append({"graphs": len(work), "seconds": time.time() - lvl_t0})
         nxt.extend(produced)
         current = nxt
@@ -223,19 +342,24 @@ def _children_of(hg: _HostGraph, part: np.ndarray, h: Hierarchy) -> list[_HostGr
     return _split(hg, part, arity, d - 1, child_stride, arity)
 
 
-def _run_naive(work, h, eps, preset, seed, total_weight, adaptive, record):
+def _run_naive(work, ctx):
+    h, eps, preset, seed, total_weight, adaptive, backend, record, cache_stats = ctx
     out = []
     for hg in work:
         arity = h.a[hg.depth - 1]
         e = _eps_for(hg, h, eps, total_weight, adaptive)
-        part = _partition_one(hg, arity, e, preset, salt=seed * 100003 + hg.uid)
+        part = _partition_one(hg, arity, e, preset, seed * 100003 + hg.uid,
+                              backend, cache_stats)
         record(_next_pow2(hg.n), hg.n)
         out.extend(_children_of(hg, part, h))
     return out
 
 
-def _run_layer(work, h, eps, preset, seed, total_weight, adaptive, record, bucketed: bool):
-    """One vmapped partition program per (bucket x arity) group."""
+def _run_layer(work, ctx, bucketed: bool):
+    """One vmapped partition program per (bucket x arity) group, fetched
+    from the compiled-executable cache; members ship as one stacked
+    transfer per field."""
+    h, eps, preset, seed, total_weight, adaptive, backend, record, cache_stats = ctx
     groups: dict[tuple[int, int, int], list[_HostGraph]] = {}
     for hg in work:
         if bucketed:
@@ -250,63 +374,74 @@ def _run_layer(work, h, eps, preset, seed, total_weight, adaptive, record, bucke
     for (kn, km, arity), members in groups.items():
         N = kn or _next_pow2(max(m.n for m in members))
         M = km or _next_pow2(max(max(m.m, 1) for m in members))
-        gs = [m.to_device(N, M) for m in members]
-        batch = jax.tree.map(lambda *xs: jnp.stack(xs), *gs)
+        B = len(members)
+        lv = num_levels(N, arity)
+        deg = _ell_deg_for(members, backend)
+        _note_program(N, M, B, arity, lv, preset, backend, deg, cache_stats)
+        fn = _batched_partition(arity, lv, preset, backend, deg)
+        batch = _stack_to_device(members, N, M)
         eps_arr = jnp.asarray(
             [_eps_for(m, h, eps, total_weight, adaptive) for m in members], jnp.float32
         )
         salts = jnp.asarray([seed * 100003 + m.uid for m in members], jnp.int32)
-        lv = num_levels(N, arity)
-        parts = jax.vmap(lambda gg, ee, ss: partition(gg, arity, ee, lv, preset, ss))(
-            batch, eps_arr, salts
-        )
-        parts = np.asarray(parts)
+        parts = np.asarray(fn(batch, eps_arr, salts))
         for m_i, hg in enumerate(members):
             record(N, hg.n)
             out.extend(_children_of(hg, parts[m_i][: hg.n], h))
     return out
 
 
-def _run_queue(work, h, eps, preset, seed, total_weight, adaptive, record, workers: int = 4):
-    """PRIORITY QUEUE (Algorithm 2): master pops the largest subgraph,
-    dispatches to a worker; children re-enter the queue. Because XLA
-    executes dispatched programs asynchronously, host worker threads play
-    the role of the paper's thread groups."""
-    heap: list[tuple[int, int, _HostGraph]] = []
-    lock = threading.Lock()
-    out: list[_HostGraph] = []
-    pending = [0]  # number of in-flight + queued tasks
-    done = threading.Event()
+def _run_queue(work, ctx, workers: int | None = None):
+    """PRIORITY QUEUE (Algorithm 2): workers pop the largest pending
+    subgraph from a condition-variable-guarded heap; children re-enter the
+    queue until only leaves remain. XLA dispatch is asynchronous, so while
+    one worker blocks on device results another extracts subgraphs on the
+    host — the JAX analogue of the paper's thread groups. No polling: the
+    seed's 1 ms sleep-poll loop (and its unreachable ``done.is_set()``
+    early-return) is replaced by ``Condition.wait``/``notify_all``.
 
-    def push(hg: _HostGraph):
-        with lock:
-            heapq.heappush(heap, (-hg.n, hg.uid, hg))
-            pending[0] += 1
+    Worker count defaults to the host core count clamped to [2, 4]. The
+    floor of 2 is deliberate even on a 1-core host: XLA releases the GIL
+    while a dispatched program executes, so a second worker keeps host-side
+    subgraph extraction overlapping device compute. The ceiling avoids
+    oversubscription — XLA:CPU multithreads each program itself, and going
+    2 -> 4 workers on a 2-core container measured ~4% SLOWER.
+    """
+    if workers is None:
+        import os
+        workers = max(2, min(4, os.cpu_count() or 2))
+    h, eps, preset, seed, total_weight, adaptive, backend, record, cache_stats = ctx
+    cv = threading.Condition()
+    heap: list[tuple[int, int, _HostGraph]] = []
+    out: list[_HostGraph] = []
+    pending = [0]   # queued + in-flight tasks, guarded by cv
+    errors: list[BaseException] = []
 
     for hg in work:
-        push(hg)
+        heapq.heappush(heap, (-hg.n, hg.uid, hg))
+        pending[0] += 1
 
     def worker():
         while True:
-            with lock:
-                if pending[0] == 0:
-                    done.set()
+            with cv:
+                while not heap and pending[0] > 0 and not errors:
+                    cv.wait()
+                if errors or pending[0] == 0:
                     return
-                if not heap:
-                    task = None
-                else:
-                    task = heapq.heappop(heap)[2]
-            if task is None:
-                if done.is_set():
-                    return
-                time.sleep(0.001)
-                continue
-            arity = h.a[task.depth - 1]
-            e = _eps_for(task, h, eps, total_weight, adaptive)
-            part = _partition_one(task, arity, e, preset, salt=seed * 100003 + task.uid)
-            record(_next_pow2(task.n), task.n)
-            children = _children_of(task, part, h)
-            with lock:
+                task = heapq.heappop(heap)[2]
+            try:
+                arity = h.a[task.depth - 1]
+                e = _eps_for(task, h, eps, total_weight, adaptive)
+                part = _partition_one(task, arity, e, preset,
+                                      seed * 100003 + task.uid, backend, cache_stats)
+                record(_next_pow2(task.n), task.n)
+                children = _children_of(task, part, h)
+            except BaseException as exc:  # propagate to the caller
+                with cv:
+                    errors.append(exc)
+                    cv.notify_all()
+                return
+            with cv:
                 pending[0] -= 1
                 for c in children:
                     if c.depth > 0:
@@ -314,15 +449,15 @@ def _run_queue(work, h, eps, preset, seed, total_weight, adaptive, record, worke
                         pending[0] += 1
                     else:
                         out.append(c)
-                if pending[0] == 0:
-                    done.set()
-                    return
+                cv.notify_all()
 
     threads = [threading.Thread(target=worker) for _ in range(workers)]
     for t in threads:
         t.start()
     for t in threads:
         t.join()
+    if errors:
+        raise errors[0]
     return out
 
 

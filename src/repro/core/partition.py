@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from .coarsen import coarsen_once
-from .graph import Graph, block_weights, edge_cut
+from .graph import Graph, block_weights, default_ell_deg, edge_cut
 from .initial import initial_partition
 from .refine import lp_refine, rebalance
 
@@ -54,7 +54,8 @@ def num_levels(n: int, k: int, coarse_factor: int = 24) -> int:
 
 
 def _partition_single(
-    g: Graph, k: int, eps: jax.Array, levels: int, preset: Preset, salt: jax.Array
+    g: Graph, k: int, eps: jax.Array, levels: int, preset: Preset, salt: jax.Array,
+    backend: str = "auto", ell_deg: int | None = None,
 ) -> jax.Array:
     """One seeded multilevel run. Python loop over levels unrolls at trace
     time (static count); all shapes stay (N, M)."""
@@ -76,18 +77,22 @@ def _partition_single(
     for lvl in range(levels - 1, -1, -1):
         part = part[maps[lvl]]  # project to finer level
         part = lp_refine(
-            graphs[lvl], part, k, Lmax, rounds=preset.refine_rounds, salt=salt + 1000 + lvl
+            graphs[lvl], part, k, Lmax, rounds=preset.refine_rounds,
+            salt=salt + 1000 + lvl, backend=backend, ell_deg=ell_deg,
         )
-        part = rebalance(graphs[lvl], part, k, Lmax, rounds=4, salt=salt + 2000 + lvl)
+        part = rebalance(graphs[lvl], part, k, Lmax, rounds=4,
+                         salt=salt + 2000 + lvl, backend=backend, ell_deg=ell_deg)
 
     for cyc in range(preset.vcycles):
-        part = lp_refine(g, part, k, Lmax, rounds=preset.refine_rounds, salt=salt + 3000 + cyc)
-        part = rebalance(g, part, k, Lmax, rounds=4, salt=salt + 4000 + cyc)
+        part = lp_refine(g, part, k, Lmax, rounds=preset.refine_rounds,
+                         salt=salt + 3000 + cyc, backend=backend, ell_deg=ell_deg)
+        part = rebalance(g, part, k, Lmax, rounds=4, salt=salt + 4000 + cyc,
+                         backend=backend, ell_deg=ell_deg)
     return part
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "levels", "preset_name")
+    jax.jit, static_argnames=("k", "levels", "preset_name", "backend", "ell_deg")
 )
 def partition(
     g: Graph,
@@ -96,11 +101,16 @@ def partition(
     levels: int,
     preset_name: str = "eco",
     salt: int | jax.Array = 0,
+    backend: str = "auto",
+    ell_deg: int | None = None,
 ) -> jax.Array:
     """Balanced k-way partition of ``g`` minimizing edge-cut.
 
     Restarts run vectorized over salts; the winner is the best *balanced*
     partition by edge-cut (unbalanced runs are heavily penalized).
+    ``ell_deg`` (static) pins the ELL degree cap for the kernel-backed
+    refinement; pass one computed from the REAL vertex/edge counts (pow2
+    padding skews the in-jit default by up to 2x; see core/refine.py).
     """
     preset = Preset.get(preset_name)
     salt = jnp.asarray(salt, jnp.int32)
@@ -110,7 +120,7 @@ def partition(
     salts = salt * 131 + jnp.arange(preset.restarts, dtype=jnp.int32) * 7919
 
     def run(s):
-        p = _partition_single(g, k, eps, levels, preset, s)
+        p = _partition_single(g, k, eps, levels, preset, s, backend, ell_deg)
         cut = edge_cut(g, p)
         Lmax = (1.0 + eps) * g.total_weight() / k
         over = jnp.maximum(block_weights(g, p, k) - Lmax, 0.0).sum()
@@ -121,7 +131,12 @@ def partition(
     return parts[best]
 
 
-def partition_host(g: Graph, k: int, eps: float, preset: str = "eco", salt: int = 0) -> jax.Array:
-    """Convenience wrapper choosing the level count from the real size."""
+def partition_host(g: Graph, k: int, eps: float, preset: str = "eco", salt: int = 0,
+                   backend: str = "auto") -> jax.Array:
+    """Convenience wrapper choosing level count + ELL degree cap from the
+    REAL sizes (not the padded shapes)."""
+    from .refine import resolve_backend
     lv = num_levels(int(g.n), k)
-    return partition(g, k, jnp.float32(eps), lv, preset, salt)
+    deg = (default_ell_deg(int(g.n), int(g.m))
+           if resolve_backend(backend) == "ell" else None)
+    return partition(g, k, jnp.float32(eps), lv, preset, salt, backend, deg)

@@ -1,11 +1,26 @@
-"""Jitted public wrappers for the kernels.
+"""Jitted public wrappers for the kernels — the single dispatch point.
 
-``backend`` selection: on TPU the Pallas kernels run compiled; on CPU (this
-container) they run in interpret mode for validation, and callers that need
-speed (the partitioner inner loops) use the jnp reference implementations,
-which XLA:CPU fuses well.
+Every caller that wants a kernel (refinement gain pass, mapping-cost
+evaluation, attention) goes through this module; nothing else in the repo
+decides pallas-vs-XLA on its own. The policy lives in one helper:
+
+``kernel_backend()`` returns one of
+
+* ``"pallas"``    — a real TPU backend is present: Pallas kernels run
+                    COMPILED (``interpret=False``).
+* ``"interpret"`` — forced via ``REPRO_KERNEL_BACKEND=interpret``: Pallas
+                    kernels run under the interpreter (CI parity testing on
+                    CPU; slow).
+* ``"xla"``       — anything else (CPU/GPU default): the pure-jnp reference
+                    implementations, which XLA fuses well.
+
+``REPRO_KERNEL_BACKEND`` overrides the device-derived default with any of
+the three values; per-call ``use_pallas=`` arguments override both.
 """
 from __future__ import annotations
+
+import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,22 +35,44 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def kernel_backend() -> str:
+    """Resolve the kernel dispatch policy (see module docstring)."""
+    forced = os.environ.get("REPRO_KERNEL_BACKEND", "").lower()
+    if forced in ("pallas", "interpret", "xla"):
+        return forced
+    return "pallas" if _on_tpu() else "xla"
+
+
+def dispatch(use_pallas: bool | None = None) -> tuple[bool, bool]:
+    """(use_pallas, interpret) for a kernel call.
+
+    ``use_pallas=None`` defers to :func:`kernel_backend`; an explicit bool
+    keeps the old per-call override semantics (interpret mode is then
+    enabled exactly when no real TPU is present).
+    """
+    if use_pallas is None:
+        backend = kernel_backend()
+        return backend != "xla", backend == "interpret"
+    return use_pallas, not _on_tpu()
+
+
+_mapcost_ref_jit = jax.jit(ref.mapcost_ref)
+
+
 def mapcost(rows, cols, ewgt, pe_of, g_below, dvec, use_pallas: bool | None = None):
     """J(C, D, Pi) over directed edge arrays (padding weight must be 0)."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
+    use_pallas, interpret = dispatch(use_pallas)
     if use_pallas:
         return mapcost_pallas(rows, cols, ewgt, pe_of, g_below, dvec,
-                              interpret=not _on_tpu())
-    return ref.mapcost_ref(rows, cols, ewgt, pe_of, g_below, dvec)
+                              interpret=interpret)
+    return _mapcost_ref_jit(rows, cols, ewgt, pe_of, g_below, dvec)
 
 
 def lp_gain(adj, adw, part, k: int, use_pallas: bool | None = None):
     """(conn, best, gain) for balanced LP refinement over an ELL adjacency."""
-    if use_pallas is None:
-        use_pallas = _on_tpu()
+    use_pallas, interpret = dispatch(use_pallas)
     if use_pallas:
-        return lp_gain_pallas(adj, adw, part, k, interpret=not _on_tpu())
+        return lp_gain_pallas(adj, adw, part, k, interpret=interpret)
     return ref.lp_gain_ref(adj, adw, part, k)
 
 
@@ -51,11 +88,10 @@ def flash_attention(q, k, v, causal: bool = True, window: int = 0,
         k = jnp.repeat(k, rep, axis=2)
         v = jnp.repeat(v, rep, axis=2)
     flat = lambda x: jnp.swapaxes(x, 1, 2).reshape(B * H, S, D)
-    if use_pallas is None:
-        use_pallas = _on_tpu()
+    use_pallas, interpret = dispatch(use_pallas)
     if use_pallas:
         o = flash_attention_pallas(flat(q), flat(k), flat(v), causal, window,
-                                   interpret=not _on_tpu())
+                                   interpret=interpret)
     else:
         o = ref.flash_ref(flat(q), flat(k), flat(v), causal, window)
     return jnp.swapaxes(o.reshape(B, H, S, D), 1, 2)

@@ -26,7 +26,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+try:
+    from jax import shard_map
+except ImportError:  # jax < 0.5 ships it under experimental only
+    from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from .config import ModelConfig

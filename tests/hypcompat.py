@@ -1,0 +1,34 @@
+"""Optional-hypothesis shim.
+
+The container image does not ship ``hypothesis``; a bare module-level
+``from hypothesis import ...`` turned every importing test module into a
+COLLECTION ERROR, taking all its non-property tests down with it. Import
+``given/settings/st`` from here instead: with hypothesis installed the real
+objects pass through; without it, ``@given`` marks just the property tests
+as skipped and the rest of the module still runs.
+"""
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda f: pytest.mark.skip(reason="hypothesis not installed")(f)
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _StrategyStub:
+        """st.<anything>(...).map(...).filter(...) all chain back to the
+        stub; only decoration-time use is needed."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: self
+
+        def __call__(self, *a, **k):
+            return self
+
+    st = _StrategyStub()

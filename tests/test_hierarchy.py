@@ -2,7 +2,7 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core.hierarchy import (Hierarchy, adaptive_epsilon, parse_hierarchy,
                                   pe_distance, tpu_v5e_hierarchy)

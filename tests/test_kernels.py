@@ -3,7 +3,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import graph as G
 from repro.core.hierarchy import Hierarchy
@@ -83,3 +83,100 @@ def test_ops_dispatch():
     a = ops.mapcost(rows, cols, w, pe, gb, dv, use_pallas=False)
     b = ops.mapcost(rows, cols, w, pe, gb, dv, use_pallas=True)
     np.testing.assert_allclose(float(a), float(b), rtol=1e-5)
+
+
+# --- PR3: randomized kernel parity (property-style, seeded loops) -------------
+
+def _rand_hier(rng):
+    l = int(rng.integers(2, 4))
+    a = tuple(int(rng.integers(2, 5)) for _ in range(l))
+    d = tuple(float(10.0 ** i) for i in range(l))
+    return Hierarchy(a=a, d=d)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_mapcost_parity_random(seed):
+    """mapcost_pallas (interpret) == jnp oracle on random edge arrays with
+    zero-weight padding tails (the padded-edge case)."""
+    rng = np.random.default_rng(seed)
+    h = _rand_hier(rng)
+    n = int(rng.integers(16, 400))
+    m = int(rng.integers(1, 2000))
+    rows = rng.integers(0, n, m)
+    cols = rng.integers(0, n, m)
+    w = rng.random(m).astype(np.float32)
+    cut = int(rng.integers(0, m))  # zero-weight tail == padding slots
+    w[cut:] = 0.0
+    pe = jnp.asarray(rng.integers(0, h.k, n), jnp.int32)
+    gb = jnp.asarray((1,) + h.strides[:-1], jnp.int32)
+    dv = jnp.asarray(h.d, jnp.float32)
+    args = (jnp.asarray(rows, jnp.int32), jnp.asarray(cols, jnp.int32),
+            jnp.asarray(w), pe, gb, dv)
+    a = ref.mapcost_ref(*args)
+    b = mapcost_pallas(*args, interpret=True)
+    np.testing.assert_allclose(float(a), float(b), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_lp_gain_parity_random(seed):
+    """lp_gain_pallas (interpret) == jnp oracle on random ELL matrices with
+    zero-degree vertices and padded neighbour slots."""
+    rng = np.random.default_rng(1000 + seed)
+    n = int(rng.integers(8, 300))
+    deg = int(rng.integers(1, 24))
+    k = int(rng.integers(2, 9))
+    adj = rng.integers(0, n + 1, (n, deg))          # n == pad id
+    zero_rows = rng.random(n) < 0.2                 # zero-degree vertices
+    adj[zero_rows] = n
+    adw = rng.random((n, deg)).astype(np.float32) * (adj < n)
+    part = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    adj = jnp.asarray(adj, jnp.int32)
+    adw = jnp.asarray(adw)
+    c1, b1, g1 = ref.lp_gain_ref(adj, adw, part, k)
+    c2, b2, g2 = lp_gain_pallas(adj, adw, part, k, interpret=True)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-4)
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), atol=1e-4)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_ell_adjacency_parity(seed):
+    """graph.ell_adjacency == connectivity on non-overflow rows, and the
+    overflow mask flags exactly the rows whose degree exceeds the cap."""
+    rng = np.random.default_rng(seed)
+    g = G.gen_rgg(int(rng.integers(100, 500)), seed=seed)
+    k = int(rng.integers(2, 6))
+    part = jnp.asarray(rng.integers(0, k, g.N), jnp.int32)
+    degs = np.asarray(G.degrees(g))[: int(g.n)]
+    for cap in (8, int(max(degs.max(), 1) + 7) // 8 * 8):
+        adj, adw, ovf = G.ell_adjacency(g, cap)
+        ovf_np = np.asarray(ovf)
+        assert np.array_equal(ovf_np[: int(g.n)], degs > cap)
+        conn_e, _, _ = ref.lp_gain_ref(adj, adw, part, k)
+        conn_c = connectivity(g, part, k)
+        keep = ~ovf_np
+        np.testing.assert_allclose(np.asarray(conn_e)[keep],
+                                   np.asarray(conn_c)[keep], atol=1e-4)
+
+
+def test_ops_lp_gain_dispatch():
+    """ops.lp_gain returns identical numbers through either backend flag."""
+    rng = np.random.default_rng(7)
+    n, deg, k = 200, 12, 5
+    adj = jnp.asarray(rng.integers(0, n + 1, (n, deg)), jnp.int32)
+    adw = jnp.asarray(rng.random((n, deg)) * (np.asarray(adj) < n), jnp.float32)
+    part = jnp.asarray(rng.integers(0, k, n), jnp.int32)
+    c1, b1, g1 = ops.lp_gain(adj, adw, part, k, use_pallas=False)
+    c2, b2, g2 = ops.lp_gain(adj, adw, part, k, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(c1), np.asarray(c2), atol=1e-4)
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+
+
+def test_kernel_backend_env(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
+    assert ops.kernel_backend() == "interpret"
+    assert ops.dispatch() == (True, True)
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "xla")
+    assert ops.dispatch() == (False, False)
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND")
+    assert ops.kernel_backend() in ("pallas", "xla")

@@ -4,7 +4,7 @@ import itertools
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.core import graph as G
 from repro.core.hierarchy import Hierarchy

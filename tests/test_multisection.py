@@ -104,3 +104,59 @@ def test_sharedmap_quality_vs_baselines(g):
                                             refine_mapping=True)).J
     j_gm = evaluate_J(g, h, global_multisection(g, h, 0.03, "strong").pe_of)
     assert j_sm <= 1.2 * j_gm, (j_sm, j_gm)
+
+
+# --- PR3: CSR round-trip, queue rewrite, compile cache ------------------------
+
+def test_to_device_csr_roundtrip():
+    """_HostGraph.to_device must produce a VALID padded CSR: exact indptr
+    prefix (no clamping artifacts), sorted rows, and per-row neighbour
+    multisets identical to the host arrays."""
+    from repro.core.multisection import _HostGraph, host_graph_from
+
+    g0 = G.gen_rgg(300, seed=11)
+    hg = host_graph_from(g0)
+    N, M = 512, 4096  # generous padding
+    g = hg.to_device(N, M)
+    ind = np.asarray(g.indptr)
+    rows = np.asarray(g.rows)
+    cols = np.asarray(g.cols)
+    m = int(g.m)
+    n = int(g.n)
+    assert ind.shape == (N + 1,)
+    assert ind[0] == 0 and ind[-1] == m
+    assert (np.diff(ind) >= 0).all()
+    # padding rows (>= n) are empty and all point at the tail
+    assert (ind[n:] == m).all()
+    # rows sorted over real slots, consistent with indptr
+    assert (np.diff(rows[:m]) >= 0).all()
+    for u in range(n):
+        lo, hi = ind[u], ind[u + 1]
+        assert (rows[lo:hi] == u).all()
+        expect = np.sort(hg.cols[hg.rows == u])
+        got = np.sort(cols[lo:hi])
+        assert np.array_equal(got, expect), u
+    # padded edge slots are weight-0 anchors
+    assert (np.asarray(g.ewgt)[m:] == 0).all()
+    assert (rows[m:] == N - 1).all()
+
+
+def test_queue_equals_naive():
+    """queue and naive pad subgraphs identically and salt by hierarchy
+    position, so their mappings must be bit-equal for a fixed seed."""
+    g = G.gen_rgg(800, seed=5)
+    h = Hierarchy(a=(3, 4), d=(1.0, 10.0))
+    a = hierarchical_multisection(g, h, eps=0.03, preset="fast", strategy="queue", seed=9)
+    b = hierarchical_multisection(g, h, eps=0.03, preset="fast", strategy="naive", seed=9)
+    assert np.array_equal(a.pe_of, b.pe_of)
+    assert a.stats["partition_calls"] == b.stats["partition_calls"]
+
+
+def test_compile_cache_reuse():
+    """A repeat run must be all cache hits (no new XLA programs)."""
+    g = G.gen_rgg(700, seed=6)
+    h = Hierarchy(a=(4, 2), d=(1.0, 10.0))
+    hierarchical_multisection(g, h, preset="fast", strategy="bucket", seed=1)
+    res = hierarchical_multisection(g, h, preset="fast", strategy="bucket", seed=1)
+    cc = res.stats["compile_cache"]
+    assert cc["misses"] == 0 and cc["hits"] > 0, cc

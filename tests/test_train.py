@@ -6,7 +6,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from hypcompat import given, settings, st
 
 from repro.configs.registry import get_smoke_config
 from repro.data.pipeline import DataConfig, host_shard, make_batch

@@ -11,6 +11,8 @@ section maps to a paper artifact (DESIGN.md §8):
     scalability        Fig 4    — restart-lane scaling (vmap width)
     mapping_vs_default —        — SharedMap device order for the prod mesh
     kernels            —        — Pallas kernel oracles timing
+    serve              —        — mapping service: cached-repeat latency and
+                                  cross-request batched throughput (PR5)
 """
 from __future__ import annotations
 
@@ -259,6 +261,111 @@ def bench_kernels(scale: str, quick: bool):
     BENCH["sections"]["kernels"]["backend"] = ops.kernel_backend()
 
 
+def bench_serve(scale: str, quick: bool):
+    """Mapping service vs sequential shared_map: cached-repeat latency and
+    cross-request coalesced throughput.
+
+    Workload: a burst of distinct small communication graphs on a DEEP
+    hierarchy — the service's target traffic. Small instances and many
+    hierarchy levels mean many tiny per-request dispatches, which is where
+    per-dispatch overhead rivals partition compute and coalescing pays;
+    large single mappings stay compute-bound and gain little (that regime
+    is benchmarked by thread_strategies).
+
+    The throughput service runs with the result cache DISABLED and the
+    timed reps reuse the warm seeds: burst composition (and therefore the
+    compiled batch widths) is deterministic, so the measurement is
+    steady-state compute, free of both compile noise and cache shortcuts.
+    """
+    from repro.core import graph as G
+    from repro.core.api import SharedMapConfig, shared_map_direct
+    from repro.core.hierarchy import Hierarchy
+    from repro.serve.mapper import MappingService
+
+    h = Hierarchy(a=(2, 2, 2, 2), d=(1.0, 5.0, 10.0, 100.0))
+    R = 8 if quick else 24
+    n = 64
+    seeds = (1, 2) if quick else (1, 2, 3)
+    gs = [G.gen_rgg(n, seed=100 + i) for i in range(R)]
+    cfg = SharedMapConfig(preset="fast")
+    section = BENCH["sections"].setdefault("serve", {})
+
+    # sequential baseline (direct path), warmed by its own first sweep
+    for s in seeds:
+        for g in gs:
+            shared_map_direct(g, h, SharedMapConfig(preset="fast", seed=s))
+    seq = float("inf")
+    for s in seeds:
+        t0 = time.time()
+        for g in gs:
+            shared_map_direct(g, h, SharedMapConfig(preset="fast", seed=s))
+        seq = min(seq, time.time() - t0)
+    emit(f"serve/sequential_direct/{R}x_rgg{n}", seq * 1e6,
+         f"per_req_ms={seq/R*1e3:.1f}")
+
+    svc = MappingService(cache_entries=0)  # throughput: no result cache
+    try:
+        # COLD first-request latency: the service's vmapped B=1 programs
+        # are distinct from the direct path's, so this pays their compiles
+        # — the number warmup() exists to hide.
+        t0 = time.time()
+        first = svc.map(gs[0], h, cfg)
+        cold_s = time.time() - t0
+        emit(f"serve/first_request_cold/rgg{n}", cold_s * 1e6,
+             f"cache_hit={first.stats['result_cache']['hit']}")
+
+        for s in seeds:  # warm the merged batch widths
+            for f in svc.submit_many([(g, h, SharedMapConfig(preset="fast",
+                                                             seed=s))
+                                      for g in gs]):
+                f.result()
+        bat = float("inf")
+        for s in seeds:
+            t0 = time.time()
+            futs = svc.submit_many([(g, h, SharedMapConfig(preset="fast",
+                                                           seed=s))
+                                    for g in gs])
+            for f in futs:
+                f.result()
+            bat = min(bat, time.time() - t0)
+        tput = seq / bat
+        emit(f"serve/batched_service/{R}x_rgg{n}", bat * 1e6,
+             f"throughput_vs_sequential={tput:.2f}x")
+        co = svc.stats()["coalesce"]
+    finally:
+        svc.close()
+
+    # cached-repeat latency on a caching service (identical request twice)
+    svc2 = MappingService()
+    try:
+        svc2.map(gs[0], h, cfg)
+        t0 = time.time()
+        hit_reps = 20
+        for _ in range(hit_reps):
+            res = svc2.map(gs[0], h, cfg)
+        hit_s = (time.time() - t0) / hit_reps
+        assert res.stats["result_cache"]["hit"] is True
+        cached_speedup = (seq / R) / hit_s
+        emit(f"serve/cached_repeat/rgg{n}", hit_s * 1e6,
+             f"speedup_vs_compute={cached_speedup:.0f}x")
+        rc = svc2.stats()["result_cache"]
+    finally:
+        svc2.close()
+
+    section.update({
+        "requests": R,
+        "instance": f"rgg{n}",
+        "hierarchy": "x".join(map(str, h.a)),
+        "sequential_wall_s": seq,
+        "batched_wall_s": bat,
+        "throughput_speedup": tput,
+        "cached_repeat_s": hit_s,
+        "cached_speedup": cached_speedup,
+        "coalesce": co,
+        "result_cache": rc,
+    })
+
+
 SECTIONS = {
     "quality_profiles": bench_quality_profiles,
     "thread_strategies": bench_thread_strategies,
@@ -267,6 +374,7 @@ SECTIONS = {
     "mapping_vs_default": bench_mapping_vs_default,
     "refine_backends": bench_refine_backends,
     "kernels": bench_kernels,
+    "serve": bench_serve,
 }
 
 
@@ -276,7 +384,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=["small", "large", "paper"], default="small")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SECTIONS))
-    ap.add_argument("--out", default="BENCH_PR3.json",
+    ap.add_argument("--out", default="BENCH_PR5.json",
                     help="telemetry JSON path ('' disables)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None

@@ -41,17 +41,60 @@ class SharedMapResult:
     stats: dict
 
 
+# An installed serve.mapper.MappingService (None = direct execution). The
+# service registers itself here so `shared_map` callers transparently gain
+# cross-request batching and the result cache; the hook lives on this side
+# to keep core free of any serve import (serve.mapper imports core).
+_SERVICE = None
+
+
+def install_service(service) -> object | None:
+    """Route ``shared_map`` through ``service`` (None = direct path).
+    Returns the previously installed service."""
+    global _SERVICE
+    prev = _SERVICE
+    _SERVICE = service
+    return prev
+
+
+def current_service():
+    return _SERVICE
+
+
 def shared_map(g: Graph, h: Hierarchy, config: SharedMapConfig | None = None) -> SharedMapResult:
-    """Solve GPMP for communication graph ``g`` on hierarchy ``h``."""
+    """Solve GPMP for communication graph ``g`` on hierarchy ``h``.
+
+    When a mapping service is installed (serve.mapper), the request is
+    served through it — coalesced with concurrent requests and answered
+    from the result cache when possible; results are bit-identical to the
+    direct path either way.
+    """
     cfg = config or SharedMapConfig()
+    if _SERVICE is not None:
+        return _SERVICE.map(g, h, cfg)
+    return shared_map_direct(g, h, cfg)
+
+
+def shared_map_direct(g: Graph, h: Hierarchy, cfg: SharedMapConfig) -> SharedMapResult:
+    """The in-process path (no service indirection); also the fallback the
+    service itself uses for the non-plannable strategies (naive/queue)."""
     res = hierarchical_multisection(
         g, h, eps=cfg.eps, preset=cfg.preset, strategy=cfg.strategy,
         seed=cfg.seed, adaptive=cfg.adaptive, backend=cfg.backend,
     )
+    res.pe_of = finalize_mapping(g, h, cfg, res.pe_of, res.stats)
+    return SharedMapResult(pe_of=res.pe_of, J=evaluate_J(g, h, res.pe_of), stats=res.stats)
+
+
+def finalize_mapping(g: Graph, h: Hierarchy, cfg: SharedMapConfig,
+                     pe_of: np.ndarray, stats: dict) -> np.ndarray:
+    """The shared post-multisection step: optional block<->PE swap pass.
+    Split out so the service's planner path applies EXACTLY the same
+    finalization as the direct path (bit-identity)."""
     if cfg.refine_mapping:
         from .mapping import quotient_matrix, swap_refine
-        C = quotient_matrix(g, res.pe_of, h.k)
+        C = quotient_matrix(g, pe_of, h.k)
         perm = swap_refine(C, h, np.arange(h.k, dtype=np.int64), seed=cfg.seed)
-        res.pe_of = perm[res.pe_of]
-        res.stats["refined"] = True
-    return SharedMapResult(pe_of=res.pe_of, J=evaluate_J(g, h, res.pe_of), stats=res.stats)
+        pe_of = perm[pe_of]
+        stats["refined"] = True
+    return pe_of

@@ -108,10 +108,13 @@ def contract(g: Graph, labels: jax.Array) -> tuple[Graph, jax.Array]:
     rows_c = jnp.where(in_range, rows_c, N - 1)
     cols_c = jnp.where(in_range, cols_c, N - 1)
 
+    # padded slots (>= m_coarse) anchor at row N-1 but the in_range gate
+    # already zeroes their contribution, so counts is exact as-is. (An
+    # earlier anchor correction subtracted the padded-slot count from row
+    # N-1 a second time — corrupting that row's indptr whenever the coarse
+    # graph filled the padded shape and N-1 was a REAL coarse vertex, and
+    # leaving indptr[N] < m_coarse otherwise.)
     counts = jax.ops.segment_sum(in_range.astype(jnp.int32), rows_c, num_segments=N)
-    # padding rows (slots >= m) accumulate into N-1; subtract them
-    pad_at_anchor = jnp.sum((~in_range).astype(jnp.int32))
-    counts = counts.at[N - 1].add(-pad_at_anchor)
     indptr_c = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)]).astype(jnp.int32)
 
     gc = Graph(

@@ -32,9 +32,13 @@ def evaluate_J(g: Graph, h: Hierarchy, pe_of: np.ndarray,
     otherwise. Padded edge slots carry weight 0, so no mask is needed.
     """
     pe = jnp.asarray(np.asarray(pe_of), jnp.int32)
-    pad = jnp.zeros(g.N - pe.shape[0], jnp.int32) if pe.shape[0] < g.N else None
-    if pad is not None:
-        pe = jnp.concatenate([pe, pad])
+    if pe.shape[0] > g.N:
+        raise ValueError(
+            f"pe_of has {pe.shape[0]} entries but the graph holds only "
+            f"{int(g.n)} vertices (padded to N={g.N}); pass one PE id per "
+            f"vertex of THIS graph")
+    if pe.shape[0] < g.N:
+        pe = jnp.concatenate([pe, jnp.zeros(g.N - pe.shape[0], jnp.int32)])
     g_below = jnp.asarray((1,) + h.strides[:-1], jnp.int32)
     dvec = jnp.asarray(h.d, jnp.float32)
     return float(kops.mapcost(g.rows, g.cols, g.ewgt, pe, g_below, dvec,

@@ -22,6 +22,26 @@ Scheduling strategies (§4.2-4.5), adapted from C++ threads to JAX/XLA:
                 so one worker's host-side subgraph extraction overlaps
                 another's device compute). Paper: Algorithm 2.
 
+Planner / executor split
+------------------------
+The LAYER/BUCKET strategies are expressed as a reusable two-phase planner
+so that an external scheduler can interleave work from MANY in-flight
+hierarchies (serve/mapper.MappingService):
+
+* :func:`plan_level` turns one hierarchy level's pending subgraphs into
+  :class:`PlanGroup`s — pure bookkeeping, no device work. Each group
+  carries everything a dispatch needs (members, padded shapes, arity,
+  preset/backend/ELL-degree, per-member eps and salts).
+* :func:`execute_group_batch` runs one stacked vmapped dispatch for one or
+  MORE groups sharing :attr:`PlanGroup.exec_key` — the cross-request
+  coalescing primitive. vmap lanes are independent, so a member's result
+  is bit-identical whatever batch it rides in (tested).
+* :class:`LevelPlanner` is the level-stepped state machine driving one
+  hierarchy: ``plan() -> execute -> advance`` until done. The in-process
+  bucket/layer path of :func:`hierarchical_multisection` runs on the SAME
+  planner, so the direct path and the mapping service share every
+  planning decision — the precondition for bit-identical results.
+
 Compile-cache policy
 --------------------
 Single-subgraph calls go straight to the jitted ``partition`` (its jit
@@ -181,12 +201,17 @@ _EXEC_LOCK = threading.Lock()
 
 def _ell_deg_for(members, backend: str) -> int | None:
     """Static ELL degree cap for a dispatch, from the REAL mean directed
-    degree of the member subgraphs (pow2-padded shapes skew the in-jit
-    default by up to 2x — see core/refine.py). None when the xla backend
-    doesn't need it (avoids fragmenting the jit cache key)."""
+    degree pooled over the member subgraphs: ``ceil(sum m / sum n)``
+    (pow2-padded shapes skew the in-jit default by up to 2x — see
+    core/refine.py). Taking the MAX of per-member ceil-means, as this used
+    to, over-padded mixed buckets and fragmented the jit cache per outlier
+    member. None when the xla backend doesn't need it (avoids fragmenting
+    the jit cache key)."""
     if backend != "ell":
         return None
-    mean = max((m.m + max(m.n, 1) - 1) // max(m.n, 1) for m in members)
+    tot_m = sum(m.m for m in members)
+    tot_n = max(sum(m.n for m in members), 1)
+    mean = (tot_m + tot_n - 1) // tot_n
     return default_ell_deg(1, mean)  # N=1, M=mean -> cap from the real mean
 
 
@@ -242,6 +267,225 @@ def clear_compile_cache() -> None:
 
 
 # ---------------------------------------------------------------------------
+# the level planner (shared by the in-process strategies and serve/mapper)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanGroup:
+    """One bucket dispatch planned from a single hierarchy's current level.
+
+    Pure host-side bookkeeping: no device arrays, no compiled callables.
+    ``eps``/``salts`` are per-member (position-derived, so independent of
+    which batch the member eventually rides in).
+    """
+
+    members: list[_HostGraph]
+    N: int                # padded vertex shape of the dispatch
+    M: int                # padded edge shape
+    arity: int            # k of each member's sub-partition
+    levels: int           # static coarsening depth for (N, arity)
+    preset: str
+    backend: str
+    deg: int | None       # static ELL degree cap (None for xla)
+    eps: list[float]
+    salts: list[int]
+
+    @property
+    def exec_key(self) -> tuple:
+        """Groups with equal keys run the same compiled executable and may
+        be stacked into ONE dispatch (the cross-request coalescing key)."""
+        return (self.N, self.M, self.arity, self.levels, self.preset,
+                self.backend, self.deg)
+
+
+def plan_level(work: list[_HostGraph], h: Hierarchy, eps: float, preset: str,
+               seed: int, total_weight: float, adaptive: bool, backend: str,
+               bucketed: bool = True) -> list[PlanGroup]:
+    """Group one level's pending subgraphs into dispatch units.
+
+    ``bucketed=True`` is the BUCKET strategy (power-of-two shape buckets);
+    ``False`` is LAYER (one group per arity, padded to the level max).
+    """
+    groups: dict[tuple[int, int, int], list[_HostGraph]] = {}
+    for hg in work:
+        if bucketed:
+            key_n = _next_pow2(hg.n)
+            key_m = _next_pow2(max(hg.m, 1))
+        else:
+            key_n = key_m = 0  # one group per arity; padded to layer max below
+        arity = h.a[hg.depth - 1]
+        groups.setdefault((key_n, key_m, arity), []).append(hg)
+
+    out = []
+    for (kn, km, arity), members in groups.items():
+        N = kn or _next_pow2(max(m.n for m in members))
+        M = km or _next_pow2(max(max(m.m, 1) for m in members))
+        out.append(PlanGroup(
+            members=members, N=N, M=M, arity=arity,
+            levels=num_levels(N, arity), preset=preset, backend=backend,
+            deg=_ell_deg_for(members, backend),
+            eps=[_eps_for(m, h, eps, total_weight, adaptive) for m in members],
+            salts=[seed * 100003 + m.uid for m in members],
+        ))
+    return out
+
+
+def dispatch_group_batch(groups: list[PlanGroup], cache_stats: dict,
+                         pad_batch_pow2: bool = False) -> tuple:
+    """Stack and dispatch ONE vmapped call for PlanGroups sharing
+    ``exec_key``; returns an opaque handle for :func:`fetch_group_batch`.
+
+    XLA dispatch is asynchronous, so a scheduler can dispatch every merged
+    set of a level before fetching any — host-side stacking of the next
+    set overlaps device compute of the previous one (serve/mapper).
+
+    ``pad_batch_pow2`` replicates the last member up to the next power of
+    two (spare lanes dropped): the service uses it to bound the number of
+    distinct batch widths XLA must compile for, at the cost of idle-lane
+    compute on ragged batches.
+    """
+    key = groups[0].exec_key
+    for gr in groups[1:]:
+        if gr.exec_key != key:
+            raise ValueError(f"mismatched exec keys: {gr.exec_key} != {key}")
+    g0 = groups[0]
+    members = [m for gr in groups for m in gr.members]
+    eps = [e for gr in groups for e in gr.eps]
+    salts = [s for gr in groups for s in gr.salts]
+    B = len(members)
+    Bp = _next_pow2(B) if pad_batch_pow2 else B
+    if Bp > B:
+        members = members + [members[-1]] * (Bp - B)
+        eps = eps + [eps[-1]] * (Bp - B)
+        salts = salts + [salts[-1]] * (Bp - B)
+    _note_program(g0.N, g0.M, Bp, g0.arity, g0.levels, g0.preset, g0.backend,
+                  g0.deg, cache_stats)
+    fn = _batched_partition(g0.arity, g0.levels, g0.preset, g0.backend, g0.deg)
+    batch = _stack_to_device(members, g0.N, g0.M)
+    parts = fn(batch, jnp.asarray(eps, jnp.float32),
+               jnp.asarray(salts, jnp.int32))
+    return parts, groups
+
+
+def fetch_group_batch(handle: tuple) -> list[np.ndarray]:
+    """Block on a dispatched batch; one ``[B_i, N]`` array per group."""
+    parts, groups = handle
+    parts = np.asarray(parts)
+    out = []
+    ofs = 0
+    for gr in groups:
+        out.append(parts[ofs: ofs + len(gr.members)])
+        ofs += len(gr.members)
+    return out
+
+
+def execute_group_batch(groups: list[PlanGroup], cache_stats: dict,
+                        pad_batch_pow2: bool = False) -> list[np.ndarray]:
+    """Dispatch + fetch in one call (the in-process strategies' path).
+
+    Returns one ``[B_i, N]`` partition array per input group, in order.
+    Because vmap lanes are independent, each member's partition is
+    bit-identical to what a solo dispatch would produce — so coalescing
+    groups from different requests cannot change any request's result.
+    """
+    return fetch_group_batch(
+        dispatch_group_batch(groups, cache_stats, pad_batch_pow2))
+
+
+class LevelPlanner:
+    """Level-stepped multisection state machine for ONE hierarchy.
+
+    Alternates ``plan()`` (PlanGroups for the current level; pure host
+    work) with ``advance(results)`` (feed partition results, split
+    children, step to the next level) until ``plan()`` returns ``[]``.
+    The executor is external, so a scheduler holding several planners can
+    merge their same-``exec_key`` groups into shared dispatches
+    (serve/mapper.MappingService) — while the in-process bucket/layer path
+    executes each group alone, yielding identical per-member programs.
+    """
+
+    def __init__(self, g: Graph, h: Hierarchy, eps: float = 0.03,
+                 preset: str = "eco", seed: int = 0, adaptive: bool = True,
+                 backend: str = "auto", bucketed: bool = True):
+        self.h = h
+        self.eps = eps
+        self.preset = preset
+        self.seed = seed
+        self.adaptive = adaptive
+        self.backend = resolve_backend(backend)
+        self.bucketed = bucketed
+        root = host_graph_from(g)
+        root.depth = h.l
+        self.total_weight = float(root.vwgt.sum())
+        self.pe_of = np.zeros(root.n, np.int64)
+        self.stats = {"partition_calls": 0, "levels": [],
+                      "strategy": "bucket" if bucketed else "layer",
+                      "padded_vertex_work": 0, "real_vertex_work": 0,
+                      "backend": self.backend,
+                      "compile_cache": {"hits": 0, "misses": 0}}
+        self.cache_stats = self.stats["compile_cache"]
+        self._t0 = time.time()
+        self._level_t0: float | None = None
+        self._current: list[_HostGraph] = [root]
+        self._work: list[_HostGraph] = []
+        self._groups: list[PlanGroup] | None = None
+        self._done = False
+
+    @property
+    def done(self) -> bool:
+        return self._done
+
+    def plan(self) -> list[PlanGroup]:
+        """PlanGroups for the current level; ``[]`` once fully partitioned.
+        Idempotent until ``advance`` consumes the results."""
+        if self._done:
+            return []
+        if self._groups is None:
+            for hg in self._current:
+                if hg.depth == 0:
+                    self.pe_of[hg.orig_ids] = hg.pe_base
+            self._work = [hg for hg in self._current if hg.depth > 0]
+            if not self._work:
+                self._finish()
+                return []
+            self._level_t0 = time.time()
+            self._groups = plan_level(
+                self._work, self.h, self.eps, self.preset, self.seed,
+                self.total_weight, self.adaptive, self.backend, self.bucketed)
+        return self._groups
+
+    def advance(self, results: list[np.ndarray]) -> None:
+        """Feed one ``[B_i, N]`` partition array per group from ``plan()``."""
+        groups = self.plan()
+        if len(results) != len(groups):
+            raise ValueError(f"expected {len(groups)} results, got {len(results)}")
+        nxt: list[_HostGraph] = []
+        for gr, parts in zip(groups, results):
+            for i, hg in enumerate(gr.members):
+                self._record(gr.N, hg.n)
+                nxt.extend(_children_of(hg, parts[i][: hg.n], self.h))
+        self.stats["levels"].append(
+            {"graphs": len(self._work), "seconds": time.time() - self._level_t0})
+        self._current = nxt
+        self._groups = None
+
+    def _record(self, batchN: int, realn: int) -> None:
+        self.stats["partition_calls"] += 1
+        self.stats["padded_vertex_work"] += int(batchN)
+        self.stats["real_vertex_work"] += int(realn)
+
+    def _finish(self) -> None:
+        if not self._done:
+            self._done = True
+            self.stats["seconds"] = time.time() - self._t0
+
+    def result(self) -> "MultisectionResult":
+        if not self._done:
+            raise RuntimeError("planner has pending levels")
+        return MultisectionResult(pe_of=self.pe_of, stats=self.stats)
+
+
+# ---------------------------------------------------------------------------
 # the multisection driver
 # ---------------------------------------------------------------------------
 
@@ -289,6 +533,22 @@ def hierarchical_multisection(
 ) -> MultisectionResult:
     """Partition ``g`` along ``h`` and return the (identity) mapping."""
     backend = resolve_backend(backend)
+    if strategy in ("layer", "bucket"):
+        # the planner path: identical planning to serve/mapper, each group
+        # executed alone (no cross-request members to coalesce here).
+        planner = LevelPlanner(g, h, eps=eps, preset=preset, seed=seed,
+                               adaptive=adaptive, backend=backend,
+                               bucketed=(strategy == "bucket"))
+        while True:
+            groups = planner.plan()
+            if not groups:
+                break
+            planner.advance([execute_group_batch([gr], planner.cache_stats)[0]
+                             for gr in groups])
+        return planner.result()
+    if strategy not in ("naive", "queue"):
+        raise ValueError(f"unknown strategy {strategy!r}")
+
     root = host_graph_from(g)
     root.depth = h.l
     total_weight = float(root.vwgt.sum())
@@ -320,14 +580,8 @@ def hierarchical_multisection(
         lvl_t0 = time.time()
         if strategy == "naive":
             produced = _run_naive(work, ctx)
-        elif strategy == "layer":
-            produced = _run_layer(work, ctx, bucketed=False)
-        elif strategy == "bucket":
-            produced = _run_layer(work, ctx, bucketed=True)
-        elif strategy == "queue":
-            produced = _run_queue(work, ctx)
         else:
-            raise ValueError(f"unknown strategy {strategy!r}")
+            produced = _run_queue(work, ctx)
         stats["levels"].append({"graphs": len(work), "seconds": time.time() - lvl_t0})
         nxt.extend(produced)
         current = nxt
@@ -352,42 +606,6 @@ def _run_naive(work, ctx):
                               backend, cache_stats)
         record(_next_pow2(hg.n), hg.n)
         out.extend(_children_of(hg, part, h))
-    return out
-
-
-def _run_layer(work, ctx, bucketed: bool):
-    """One vmapped partition program per (bucket x arity) group, fetched
-    from the compiled-executable cache; members ship as one stacked
-    transfer per field."""
-    h, eps, preset, seed, total_weight, adaptive, backend, record, cache_stats = ctx
-    groups: dict[tuple[int, int, int], list[_HostGraph]] = {}
-    for hg in work:
-        if bucketed:
-            key_n = _next_pow2(hg.n)
-            key_m = _next_pow2(max(hg.m, 1))
-        else:
-            key_n = key_m = 0  # one group per arity; padded to layer max below
-        arity = h.a[hg.depth - 1]
-        groups.setdefault((key_n, key_m, arity), []).append(hg)
-
-    out = []
-    for (kn, km, arity), members in groups.items():
-        N = kn or _next_pow2(max(m.n for m in members))
-        M = km or _next_pow2(max(max(m.m, 1) for m in members))
-        B = len(members)
-        lv = num_levels(N, arity)
-        deg = _ell_deg_for(members, backend)
-        _note_program(N, M, B, arity, lv, preset, backend, deg, cache_stats)
-        fn = _batched_partition(arity, lv, preset, backend, deg)
-        batch = _stack_to_device(members, N, M)
-        eps_arr = jnp.asarray(
-            [_eps_for(m, h, eps, total_weight, adaptive) for m in members], jnp.float32
-        )
-        salts = jnp.asarray([seed * 100003 + m.uid for m in members], jnp.int32)
-        parts = np.asarray(fn(batch, eps_arr, salts))
-        for m_i, hg in enumerate(members):
-            record(N, hg.n)
-            out.extend(_children_of(hg, parts[m_i][: hg.n], h))
     return out
 
 

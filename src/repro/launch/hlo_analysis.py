@@ -99,11 +99,36 @@ def parse_computations(hlo: str) -> dict[str, Computation]:
 
 
 def _operands(op: Op) -> list[str]:
-    """Operand names: the parenthesized list right after the op kind."""
+    """Operand names: the parenthesized list right after the op kind.
+
+    Depending on the XLA version the operands appear bare (``%name``) or
+    with their type inlined (``f32[128,256]{1,0} %name``) — the name is
+    always the last whitespace-separated token.
+    """
     m = re.search(re.escape(op.kind) + r"\(([^)]*)\)", op.line)
     if not m:
         return []
-    return [o.strip().lstrip("%") for o in m.group(1).split(",") if o.strip()]
+    # split on commas at bracket depth 0 only — inlined operand types carry
+    # commas of their own (f32[128,256]{1,0})
+    pieces, cur, depth = [], [], 0
+    for ch in m.group(1):
+        if ch in "[{(":
+            depth += 1
+        elif ch in "]})":
+            depth -= 1
+        if ch == "," and depth == 0:
+            pieces.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    if cur:
+        pieces.append("".join(cur))
+    out = []
+    for o in pieces:
+        toks = o.strip().split()
+        if toks:
+            out.append(toks[-1].lstrip("%"))
+    return out
 
 
 def _dot_flops(op: Op, shapes: dict[str, str]) -> int:

@@ -51,7 +51,6 @@ class Engine:
         # prefill by stepping the decoder over the prompt (cache-exact; the
         # batched-prefill path is exercised by prefill_fn in the dry-run)
         t0 = time.time()
-        tok = jnp.asarray(prompts[:, :1], jnp.int32)
         logits = None
         for i in range(P):
             logits, cache = self._decode(self.params, jnp.asarray(prompts[:, i:i+1], jnp.int32),

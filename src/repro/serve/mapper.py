@@ -1,0 +1,459 @@
+"""Batched, cached mapping service (DESIGN.md §9).
+
+Turns the one-shot ``shared_map`` entry point into a long-lived service for
+heavy mapping traffic. Three mechanisms, all bit-transparent to callers:
+
+* **Cross-request coalescing** — every in-flight request runs on a
+  ``core.multisection.LevelPlanner``; a single scheduler thread gathers the
+  per-level :class:`PlanGroup`s of ALL active planners, merges groups with
+  equal ``exec_key`` and dispatches each merged set as ONE stacked vmapped
+  ``_batched_partition`` call. vmap lanes are independent, so each
+  request's result is bit-identical to the direct path (tested) while the
+  per-dispatch overheads (Python jit dispatch, host stacking, transfers,
+  device sync) are paid once per shape instead of once per request.
+* **Content-addressed result cache** — requests are fingerprinted by their
+  real CSR arrays + hierarchy vector + config; repeats are answered from
+  an LRU cache in microseconds. Concurrent identical requests dedup onto
+  one in-flight computation.
+* **Warmup** — :meth:`MappingService.warmup` pre-populates the process's
+  jit/program cache for the expected bucket shapes so first-request
+  latency is predictable instead of compile-bound.
+
+Usage::
+
+    svc = MappingService()
+    with svc.installed():          # route shared_map through the service
+        res = shared_map(g, h)     # coalesced + cached transparently
+    # or explicitly:
+    fut = svc.submit(g, h, cfg)    # concurrent.futures.Future
+    res = await svc.amap(g, h)     # asyncio
+    svc.close()
+
+The non-plannable strategies (``naive``/``queue``) fall back to the direct
+path on a small worker pool — still cached, never coalesced.
+"""
+from __future__ import annotations
+
+import asyncio
+import dataclasses
+import hashlib
+import threading
+import time
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from contextlib import contextmanager
+
+import numpy as np
+
+from repro.core import api as capi
+from repro.core.api import SharedMapConfig, SharedMapResult
+from repro.core.graph import Graph, from_edges
+from repro.core.hierarchy import Hierarchy
+from repro.core.mapping import evaluate_J
+from repro.core.multisection import (LevelPlanner, PlanGroup, _ell_deg_for,
+                                     _next_pow2, dispatch_group_batch,
+                                     execute_group_batch, fetch_group_batch,
+                                     host_graph_from)
+from repro.core.partition import num_levels
+from repro.core.refine import resolve_backend
+
+_PLANNABLE = ("bucket", "layer")
+
+
+def request_fingerprint(g: Graph, h: Hierarchy, cfg: SharedMapConfig) -> bytes:
+    """Content address of a mapping request: the REAL CSR arrays (padding
+    never affects planning — the planner re-pads from real sizes), the
+    hierarchy vectors and every config field that influences the result.
+    ``backend`` enters resolved, so auto/xla hit the same entry off-TPU."""
+    n = int(g.n)
+    m = int(g.m)
+    hs = hashlib.blake2b(digest_size=16)
+    for arr in (np.asarray(g.vwgt)[:n], np.asarray(g.rows)[:m],
+                np.asarray(g.cols)[:m], np.asarray(g.ewgt)[:m]):
+        a = np.ascontiguousarray(arr)
+        hs.update(str(a.dtype).encode())
+        hs.update(a.tobytes())
+    hs.update(repr((n, m, tuple(h.a), tuple(h.d), float(cfg.eps), cfg.preset,
+                    cfg.strategy, int(cfg.seed), bool(cfg.adaptive),
+                    resolve_backend(cfg.backend),
+                    bool(cfg.refine_mapping))).encode())
+    return hs.digest()
+
+
+@dataclasses.dataclass
+class _Request:
+    g: Graph
+    h: Hierarchy
+    cfg: SharedMapConfig
+    fp: bytes
+    futures: list[Future]
+    planner: LevelPlanner | None = None
+
+
+def _dummy_host_graph(N: int, M: int):
+    """A path graph filling the (N, M) padded shape, for warmup compiles."""
+    if N < 2 or M < 2:
+        raise ValueError(f"warmup shape too small: N={N}, M={M}")
+    e = max(min(N - 1, M // 2), 1)
+    u = np.arange(e, dtype=np.int64)
+    return host_graph_from(from_edges(N, u, u + 1, N=N, M=M))
+
+
+class MappingService:
+    """Async mapping service: concurrent ``(Graph, Hierarchy, config)``
+    requests, coalesced dispatches, LRU result cache, warmup.
+
+    Parameters
+    ----------
+    cache_entries: LRU bound of the result cache (0 disables caching).
+    batch_window_s: how long the scheduler waits after a request arrives
+        on an idle service before planning, so a concurrent burst lands in
+        the same coalesced dispatches. In-flight requests always coalesce
+        regardless of the window.
+    merge_across_requests: dispatch same-``exec_key`` groups of different
+        requests as one batch (False = per-request dispatches; the service
+        then only adds caching and the async front).
+    pad_batch_pow2: pad merged batches to the next power of two (spare
+        lanes replicate the last member and are dropped) so XLA compiles
+        O(log B) batch widths per shape instead of one per distinct B —
+        the knob that makes :meth:`warmup` coverage feasible.
+    fallback_workers: thread pool size for the non-plannable strategies.
+    """
+
+    def __init__(self, cache_entries: int = 256, batch_window_s: float = 0.002,
+                 merge_across_requests: bool = True, pad_batch_pow2: bool = True,
+                 fallback_workers: int = 2):
+        self.cache_entries = int(cache_entries)
+        self.batch_window_s = float(batch_window_s)
+        self.merge_across_requests = bool(merge_across_requests)
+        self.pad_batch_pow2 = bool(pad_batch_pow2)
+        self._cv = threading.Condition()
+        self._queue: list[_Request] = []
+        self._pending: dict[bytes, _Request] = {}  # queued + active, by fp
+        self._closed = False
+        self._thread: threading.Thread | None = None
+        self._fallback = ThreadPoolExecutor(
+            max_workers=max(1, fallback_workers),
+            thread_name_prefix="mapper-fallback")
+        self._cache: OrderedDict[bytes, SharedMapResult] = OrderedDict()
+        self._lock = threading.Lock()  # cache + telemetry
+        self.telemetry = {
+            "requests": 0,
+            "inflight_dedup": 0,
+            "result_cache": {"hits": 0, "misses": 0, "evictions": 0},
+            "coalesce": {"dispatches": 0, "groups": 0, "members": 0,
+                         "padded_lanes": 0},
+            "compile_cache": {"hits": 0, "misses": 0},
+            "warmup": {"programs": 0, "seconds": 0.0},
+        }
+
+    # ------------------------------------------------------------- frontend
+
+    def submit(self, g: Graph, h: Hierarchy,
+               config: SharedMapConfig | None = None) -> Future:
+        """Enqueue a mapping request; returns a Future[SharedMapResult]."""
+        cfg = config or SharedMapConfig()
+        fp = request_fingerprint(g, h, cfg)
+        fut: Future = Future()
+        cached = self._cache_get(fp)
+        if cached is not None:
+            fut.set_result(self._result_copy(cached, cache_hit=True))
+            return fut
+        with self._lock:
+            self.telemetry["requests"] += 1
+            self.telemetry["result_cache"]["misses"] += 1
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("MappingService is closed")
+            inflight = self._pending.get(fp)
+            if inflight is not None:
+                # identical request already queued/active: one computation
+                inflight.futures.append(fut)
+                with self._lock:
+                    self.telemetry["inflight_dedup"] += 1
+                return fut
+            req = _Request(g=g, h=h, cfg=cfg, fp=fp, futures=[fut])
+            self._pending[fp] = req
+            self._queue.append(req)
+            self._ensure_thread()
+            self._cv.notify_all()
+        return fut
+
+    def submit_many(self, requests) -> list[Future]:
+        """Atomically enqueue a burst of ``(g, h, config)`` requests.
+
+        All of them are admitted in ONE scheduler iteration, so the merged
+        batch compositions (and therefore the compiled batch widths) are
+        deterministic for a given burst — independent of caller timing.
+        """
+        with self._cv:  # Condition wraps an RLock: nested submit is fine
+            futs = [self.submit(g, h, cfg) for (g, h, cfg) in requests]
+        return futs
+
+    def map(self, g: Graph, h: Hierarchy,
+            config: SharedMapConfig | None = None) -> SharedMapResult:
+        """Blocking request (the ``shared_map`` route when installed)."""
+        return self.submit(g, h, config).result()
+
+    async def amap(self, g: Graph, h: Hierarchy,
+                   config: SharedMapConfig | None = None) -> SharedMapResult:
+        """Asyncio request."""
+        return await asyncio.wrap_future(self.submit(g, h, config))
+
+    # -------------------------------------------------------------- warmup
+
+    def warmup(self, shapes, ks, preset: str = "eco", backend: str = "auto",
+               eps: float = 0.03, batch_sizes=(1, 2, 4, 8),
+               ell_degs=None) -> dict:
+        """Pre-compile the bucket executables for the expected traffic.
+
+        ``shapes``: (N, M) padded bucket shapes (powers of two, as the
+        bucket scheduler produces); ``ks``: sub-partition arities;
+        ``batch_sizes``: coalesced batch widths to cover (the service pads
+        merged batches to powers of two by default, so a handful of widths
+        covers all traffic). ``ell_degs`` optionally pins the static ELL
+        degree caps to warm for the kernel backend (default: derived from
+        the dummy graph, which is what xla — the common case — ignores).
+        """
+        backend = resolve_backend(backend)
+        t0 = time.time()
+        programs = 0
+        for (N, M) in shapes:
+            hg = _dummy_host_graph(int(N), int(M))
+            degs = tuple(ell_degs) if ell_degs is not None \
+                else (_ell_deg_for([hg], backend),)
+            for k in ks:
+                lv = num_levels(int(N), int(k))
+                for deg in degs:
+                    for B in batch_sizes:
+                        gr = PlanGroup(
+                            members=[hg] * int(B), N=int(N), M=int(M),
+                            arity=int(k), levels=lv, preset=preset,
+                            backend=backend, deg=deg,
+                            eps=[float(eps)] * int(B),
+                            salts=list(range(int(B))))
+                        execute_group_batch([gr], self.telemetry["compile_cache"])
+                        programs += 1
+        dt = time.time() - t0
+        with self._lock:
+            self.telemetry["warmup"]["programs"] += programs
+            self.telemetry["warmup"]["seconds"] += dt
+        return {"programs": programs, "seconds": dt}
+
+    # ---------------------------------------------------------- install / cm
+
+    def install(self) -> "MappingService":
+        """Route ``core.api.shared_map`` through this service."""
+        capi.install_service(self)
+        return self
+
+    def uninstall(self) -> None:
+        if capi.current_service() is self:
+            capi.install_service(None)
+
+    @contextmanager
+    def installed(self):
+        prev = capi.install_service(self)
+        try:
+            yield self
+        finally:
+            capi.install_service(prev)
+
+    def close(self, wait: bool = True) -> None:
+        """Drain in-flight requests and stop the scheduler."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if self._thread is not None and wait:
+            self._thread.join()
+        self._fallback.shutdown(wait=wait)
+        self.uninstall()
+
+    def __enter__(self) -> "MappingService":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+        self.close()
+
+    def stats(self) -> dict:
+        """Snapshot of the service telemetry."""
+        with self._lock:
+            snap = {k: (dict(v) if isinstance(v, dict) else v)
+                    for k, v in self.telemetry.items()}
+            snap["result_cache"]["entries"] = len(self._cache)
+            snap["result_cache"]["capacity"] = self.cache_entries
+        return snap
+
+    # ------------------------------------------------------------ scheduler
+
+    def _ensure_thread(self) -> None:
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(target=self._loop, daemon=True,
+                                            name="mapper-scheduler")
+            self._thread.start()
+
+    def _loop(self) -> None:
+        active: list[_Request] = []
+        while True:
+            with self._cv:
+                while not self._queue and not active and not self._closed:
+                    self._cv.wait()
+                if self._closed and not self._queue and not active:
+                    return
+                newly, self._queue = self._queue, []
+            if newly and not active and self.batch_window_s > 0:
+                # idle service: hold the first arrivals briefly so a
+                # concurrent burst coalesces from level 0 on.
+                time.sleep(self.batch_window_s)
+                with self._cv:
+                    newly += self._queue
+                    self._queue = []
+            for req in newly:
+                try:
+                    self._admit(req, active)
+                except BaseException as exc:  # fail fast, never hang callers
+                    self._fail(req, exc)
+            try:
+                if active:
+                    self._step(active)
+            except BaseException as exc:
+                for req in active:
+                    self._fail(req, exc)
+                active = []
+
+    def _admit(self, req: _Request, active: list[_Request]) -> None:
+        if req.cfg.strategy in _PLANNABLE:
+            try:
+                req.planner = LevelPlanner(
+                    req.g, req.h, eps=req.cfg.eps, preset=req.cfg.preset,
+                    seed=req.cfg.seed, adaptive=req.cfg.adaptive,
+                    backend=req.cfg.backend,
+                    bucketed=(req.cfg.strategy == "bucket"))
+            except BaseException as exc:
+                self._fail(req, exc)
+                return
+            active.append(req)
+        else:
+            self._fallback.submit(self._run_fallback, req)
+
+    def _step(self, active: list[_Request]) -> None:
+        """One coalesced execution round over all active planners."""
+        plans = [(req, req.planner.plan()) for req in active]
+        merged: OrderedDict[tuple, list[tuple[_Request, int, PlanGroup]]] = \
+            OrderedDict()
+        for req, groups in plans:
+            for gi, gr in enumerate(groups):
+                merged.setdefault(gr.exec_key, []).append((req, gi, gr))
+        # dispatch ALL merged sets before fetching any: XLA dispatch is
+        # async, so stacking set k+1 overlaps device compute of set k.
+        inflight = []
+        for entries in merged.values():
+            groups = [e[2] for e in entries]
+            if self.merge_across_requests:
+                handles = [dispatch_group_batch(
+                    groups, self.telemetry["compile_cache"],
+                    pad_batch_pow2=self.pad_batch_pow2)]
+                dispatches = 1
+            else:
+                handles = [dispatch_group_batch(
+                    [gr], self.telemetry["compile_cache"]) for gr in groups]
+                dispatches = len(groups)
+            inflight.append((entries, handles))
+            members = sum(len(gr.members) for gr in groups)
+            with self._lock:
+                co = self.telemetry["coalesce"]
+                co["dispatches"] += dispatches
+                co["groups"] += len(groups)
+                co["members"] += members
+                if self.merge_across_requests and self.pad_batch_pow2:
+                    co["padded_lanes"] += _next_pow2(members) - members
+        results: dict[tuple[int, int], np.ndarray] = {}
+        for entries, handles in inflight:
+            outs = [o for hd in handles for o in fetch_group_batch(hd)]
+            for (req, gi, _), out in zip(entries, outs):
+                results[(id(req), gi)] = out
+        finished = []
+        for req, groups in plans:
+            req.planner.advance([results[(id(req), gi)]
+                                 for gi in range(len(groups))])
+            if not req.planner.plan():
+                finished.append(req)
+        for req in finished:
+            active.remove(req)
+            # finalize (evaluate_J, cache insert, future resolution) on the
+            # worker pool: it overlaps the next levels' dispatches instead
+            # of serializing behind them in the scheduler thread.
+            self._fallback.submit(self._finalize_job, req, req.planner.result())
+
+    def _run_fallback(self, req: _Request) -> None:
+        try:
+            res = capi.shared_map_direct(req.g, req.h, req.cfg)
+            self._resolve(req, res)
+        except BaseException as exc:
+            self._fail(req, exc)
+
+    def _finalize_job(self, req: _Request, ms_result) -> None:
+        try:
+            self._finalize(req, ms_result)
+        except BaseException as exc:
+            self._fail(req, exc)
+
+    def _finalize(self, req: _Request, ms_result) -> None:
+        pe_of = capi.finalize_mapping(req.g, req.h, req.cfg,
+                                      ms_result.pe_of, ms_result.stats)
+        res = SharedMapResult(pe_of=pe_of,
+                              J=evaluate_J(req.g, req.h, pe_of),
+                              stats=ms_result.stats)
+        self._resolve(req, res)
+
+    def _resolve(self, req: _Request, res: SharedMapResult) -> None:
+        self._cache_put(req.fp, res)
+        with self._cv:
+            self._pending.pop(req.fp, None)
+        for fut in req.futures:
+            if not fut.done():  # a caller may have cancelled its Future
+                fut.set_result(self._result_copy(res, cache_hit=False))
+
+    def _fail(self, req: _Request, exc: BaseException) -> None:
+        with self._cv:
+            self._pending.pop(req.fp, None)
+        for fut in req.futures:
+            if not fut.done():
+                fut.set_exception(exc)
+
+    # ---------------------------------------------------------- result cache
+
+    def _cache_get(self, fp: bytes) -> SharedMapResult | None:
+        if self.cache_entries <= 0:
+            return None
+        with self._lock:
+            res = self._cache.get(fp)
+            if res is not None:
+                self._cache.move_to_end(fp)
+                self.telemetry["requests"] += 1
+                self.telemetry["result_cache"]["hits"] += 1
+            return res
+
+    def _cache_put(self, fp: bytes, res: SharedMapResult) -> None:
+        if self.cache_entries <= 0:
+            return
+        with self._lock:
+            self._cache[fp] = res
+            self._cache.move_to_end(fp)
+            while len(self._cache) > self.cache_entries:
+                self._cache.popitem(last=False)
+                self.telemetry["result_cache"]["evictions"] += 1
+
+    def _result_copy(self, res: SharedMapResult, cache_hit: bool) -> SharedMapResult:
+        """Fresh result per caller: private pe_of, stats annotated with the
+        service telemetry (the compute stats themselves are shared refs on
+        cache hits — treat them as read-only)."""
+        with self._lock:
+            rc = dict(self.telemetry["result_cache"])
+        rc["hit"] = cache_hit
+        stats = dict(res.stats)
+        stats["result_cache"] = rc
+        stats["service"] = {"merge_across_requests": self.merge_across_requests,
+                            "pad_batch_pow2": self.pad_batch_pow2}
+        return SharedMapResult(pe_of=res.pe_of.copy(), J=res.J, stats=stats)

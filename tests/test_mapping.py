@@ -80,3 +80,17 @@ def test_quotient_matrix_symmetry_and_mass():
     # total cross mass equals the edge cut
     cut = float(G.edge_cut(g, jnp.asarray(np.pad(part, (0, g.N - n)), jnp.int32)))
     assert abs(C.sum() / 2.0 - cut) < 1e-3
+
+
+def test_evaluate_J_rejects_oversized_pe_of():
+    """Regression: a pe_of longer than the padded graph used to die with a
+    confusing negative-dimension error from jnp.zeros; now a clear
+    ValueError."""
+    g = G.gen_grid(6)
+    h = Hierarchy(a=(2, 2), d=(1.0, 10.0))
+    bad = np.zeros(g.N + 5, np.int64)
+    with pytest.raises(ValueError, match="pe_of"):
+        evaluate_J(g, h, bad)
+    # shorter-than-N (real-size) assignments still work
+    part = np.zeros(int(g.n), np.int64)
+    assert evaluate_J(g, h, part) == 0.0

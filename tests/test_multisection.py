@@ -160,3 +160,77 @@ def test_compile_cache_reuse():
     res = hierarchical_multisection(g, h, preset="fast", strategy="bucket", seed=1)
     cc = res.stats["compile_cache"]
     assert cc["misses"] == 0 and cc["hits"] > 0, cc
+
+
+# --- PR5: planner/executor split, cross-request coalescing, ell deg ----------
+
+def test_ell_deg_pooled_mean():
+    """_ell_deg_for must use the REAL pooled mean degree sum(m)/sum(n), not
+    the max of per-member ceil-means (which over-padded mixed buckets)."""
+    import dataclasses
+    from repro.core.graph import default_ell_deg
+    from repro.core.multisection import _ell_deg_for
+
+    @dataclasses.dataclass
+    class Fake:
+        n: int
+        m: int
+
+    members = [Fake(n=100, m=400), Fake(n=10, m=300)]  # means 4 and 30
+    # pooled: ceil(700/110) = 7, NOT max(4, 30) = 30
+    assert _ell_deg_for(members, "ell") == default_ell_deg(1, 7)
+    assert _ell_deg_for(members, "xla") is None
+
+
+def test_bucket_equals_naive_bitwise(g):
+    """Non-circular oracle for the planner path: bucket pads each subgraph
+    to the SAME pow2 shapes naive uses, and vmap lanes are independent, so
+    the bucket strategy (which now runs entirely on LevelPlanner +
+    execute_group_batch) must reproduce the naive strategy's mapping
+    bit-for-bit. A planning/batching bug shows up here even though both
+    in-process bucket paths share the planner code."""
+    a = hierarchical_multisection(g, H_PAPER, eps=0.03, preset="fast",
+                                  strategy="bucket", seed=2)
+    b = hierarchical_multisection(g, H_PAPER, eps=0.03, preset="fast",
+                                  strategy="naive", seed=2)
+    assert np.array_equal(a.pe_of, b.pe_of)
+
+
+def test_level_planner_matches_run_loop(g):
+    """Manually stepping a LevelPlanner (the mapping service's usage
+    pattern) must match the one-shot driver exactly."""
+    from repro.core.multisection import (LevelPlanner, execute_group_batch)
+
+    direct = hierarchical_multisection(g, H_PAPER, eps=0.03, preset="fast",
+                                       strategy="bucket", seed=2)
+    planner = LevelPlanner(g, H_PAPER, eps=0.03, preset="fast", seed=2)
+    while True:
+        groups = planner.plan()
+        if not groups:
+            break
+        planner.advance([execute_group_batch([gr], planner.cache_stats)[0]
+                         for gr in groups])
+    res = planner.result()
+    assert np.array_equal(direct.pe_of, res.pe_of)
+    assert direct.stats["partition_calls"] == res.stats["partition_calls"]
+    assert direct.stats["padded_vertex_work"] == res.stats["padded_vertex_work"]
+
+
+def test_merged_dispatch_lane_independent(g):
+    """execute_group_batch over same-key groups of DIFFERENT hierarchies
+    returns bit-identical per-member results vs solo dispatches — the
+    invariant the mapping service's cross-request coalescing rests on."""
+    from repro.core.multisection import LevelPlanner, execute_group_batch
+
+    g2 = G.gen_rgg(2500, seed=8)
+    p1 = LevelPlanner(g, H_PAPER, eps=0.03, preset="fast", seed=0)
+    p2 = LevelPlanner(g2, H_PAPER, eps=0.03, preset="fast", seed=5)
+    g1s, g2s = p1.plan(), p2.plan()
+    assert len(g1s) == len(g2s) == 1  # one root group each
+    assert g1s[0].exec_key == g2s[0].exec_key
+    cs = {"hits": 0, "misses": 0}
+    solo1 = execute_group_batch([g1s[0]], cs)[0]
+    solo2 = execute_group_batch([g2s[0]], cs)[0]
+    merged = execute_group_batch([g1s[0], g2s[0]], cs, pad_batch_pow2=True)
+    assert np.array_equal(merged[0], solo1)
+    assert np.array_equal(merged[1], solo2)

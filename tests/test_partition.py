@@ -92,6 +92,44 @@ def test_contract_invariants(seed, n):
     assert nid.min() >= 0 and nid.max() < int(gc.n)
 
 
+def test_contract_indptr_exact_with_zero_padding():
+    """Regression: when the coarse graph fills the padded shape
+    (n_coarse == N), the dropped edge slots share anchor row N-1 with a
+    REAL coarse vertex; the old anchor correction double-subtracted the
+    padded-slot count there, corrupting that vertex's indptr row."""
+    n = 16
+    rng = np.random.default_rng(3)
+    u = rng.integers(0, n, 40)
+    v = rng.integers(0, n, 40)
+    keep = u != v
+    # generous edge padding, NO vertex padding (N == n)
+    g = G.from_edges(n, u[keep], v[keep], N=n, M=256)
+    labels = jnp.arange(n, dtype=jnp.int32)  # identity: n_coarse == N
+    gc, _ = contract(g, labels)
+    assert int(gc.n) == n
+    ind = np.asarray(gc.indptr)
+    m_c = int(gc.m)
+    assert ind[0] == 0 and ind[-1] == m_c, (ind[-1], m_c)
+    assert (np.diff(ind) >= 0).all()
+    # row N-1's range holds exactly its own edges
+    rows_c = np.asarray(gc.rows)[:m_c]
+    assert ind[n] - ind[n - 1] == (rows_c == n - 1).sum()
+
+
+def test_contract_indptr_tail_with_padding():
+    """With vertex padding present, every padding row must have an empty
+    indptr range ending at m_coarse (the old correction left
+    indptr[N] < m_coarse)."""
+    g0 = G.gen_rgg(60, seed=9)
+    g = G.pad_graph(g0, 128, 1024)
+    labels = hem_match(g, rounds=2, salt=1)
+    gc, _ = contract(g, labels)
+    ind = np.asarray(gc.indptr)
+    assert ind[-1] == int(gc.m)
+    assert (np.diff(ind) >= 0).all()
+    assert (ind[int(gc.n):] == int(gc.m)).all()
+
+
 def test_matching_is_valid():
     g = G.gen_rgg(800, seed=5)
     labels = np.asarray(hem_match(g, rounds=3, salt=1))

@@ -13,6 +13,9 @@ section maps to a paper artifact (DESIGN.md §8):
     kernels            —        — Pallas kernel oracles timing
     serve              —        — mapping service: cached-repeat latency and
                                   cross-request batched throughput (PR5)
+    serve_overload     —        — admission control under an arrival-rate
+                                  ramp (p50/p99 latency, shed rate) and a
+                                  fault-injection sweep (PR6)
 """
 from __future__ import annotations
 
@@ -366,6 +369,127 @@ def bench_serve(scale: str, quick: bool):
     })
 
 
+def bench_serve_overload(scale: str, quick: bool):
+    """Overload behavior of the admission-controlled service (PR6).
+
+    Two experiments on deliberately small bounds (max_inflight=2,
+    max_queue=4 — the point is to saturate, whatever the host):
+
+    * **Arrival-rate ramp** — open-loop Poisson-ish arrivals at increasing
+      rates; per-rate p50/p99 completion latency of ADMITTED requests and
+      the shed rate. Past saturation the shed rate climbs while admitted
+      latency stays bounded — that is the load-shedding contract (an
+      unbounded queue would instead blow up latency for everyone).
+    * **Fault-injection sweep** — a burst under a 25% transient dispatch
+      failure rate: every future must resolve with a result (possibly
+      degraded) or a typed ServiceOverloadError; retries/degradations are
+      reported from the service's own telemetry.
+    """
+    from repro.core import graph as G
+    from repro.core.api import SharedMapConfig
+    from repro.core.hierarchy import Hierarchy
+    from repro.faults import FaultInjector
+    from repro.serve.admission import RetryPolicy, ServiceOverloadError
+    from repro.serve.mapper import MappingService
+
+    h = Hierarchy(a=(2, 2, 2), d=(1.0, 10.0, 100.0))
+    n = 64
+    R = 12 if quick else 32
+    gs = [G.gen_rgg(n, seed=300 + i) for i in range(R)]
+    section = BENCH["sections"].setdefault("serve_overload", {})
+
+    # warm the programs the BOUNDED service will actually run: with
+    # max_inflight=2 the coalesced widths are 1-2, so feed pairs
+    # closed-loop (a big submit_many burst would only warm the wide
+    # merged widths and the ramp would measure compiles, not serving)
+    warm = MappingService(cache_entries=0, max_inflight=2)
+    try:
+        for j in range(0, R, 2):
+            for f in warm.submit_many([(g, h, SharedMapConfig(preset="fast",
+                                                              seed=i))
+                                       for i, g in enumerate(gs[j:j + 2], j)]):
+                f.result()
+    finally:
+        warm.close()
+
+    for rate in ([50, 400] if quick else [25, 100, 400]):  # requests/s
+        svc = MappingService(max_inflight=2, max_queue=4, cache_entries=0)
+        lat: list[float] = []
+        shed = 0
+        try:
+            futs = []
+            t_start = time.time()
+            for i, g in enumerate(gs):
+                target = t_start + i / rate  # open-loop arrivals
+                delay = target - time.time()
+                if delay > 0:
+                    time.sleep(delay)
+                t0 = time.time()
+                try:
+                    f = svc.submit(g, h, SharedMapConfig(preset="fast", seed=i))
+                except ServiceOverloadError:
+                    shed += 1
+                    continue
+
+                def _done(fut, t0=t0):
+                    if fut.exception() is None:
+                        lat.append(time.time() - t0)
+
+                f.add_done_callback(_done)
+                futs.append(f)
+            for f in futs:
+                f.exception(timeout=600)  # wait; sheds were counted above
+        finally:
+            svc.close()
+        lat.sort()
+        p50 = lat[len(lat) // 2] if lat else float("nan")
+        p99 = lat[min(int(len(lat) * 0.99), len(lat) - 1)] if lat else float("nan")
+        shed_rate = shed / R
+        emit(f"serve_overload/rate{rate}/p99", p99 * 1e6,
+             f"p50_ms={p50*1e3:.1f} shed_rate={shed_rate:.2f}")
+        section[f"rate{rate}"] = {
+            "requests": R, "admitted": len(lat), "shed": shed,
+            "shed_rate": shed_rate, "p50_s": p50, "p99_s": p99,
+        }
+
+    # fault-injection sweep: all futures resolve, typed errors only. The
+    # queue admits the whole burst (this experiment is about containment,
+    # not shedding — the ramp above measures that).
+    inj = FaultInjector(seed=1, rates={"dispatch": 0.25})
+    svc = MappingService(max_inflight=2, max_queue=R, fault_injector=inj,
+                         retry=RetryPolicy(max_retries=1,
+                                           backoff_base_s=0.001))
+    ok = shed = degraded = 0
+    try:
+        t0 = time.time()
+        futs = svc.submit_many([(g, h, SharedMapConfig(preset="fast",
+                                                       seed=1000 + i))
+                                for i, g in enumerate(gs)])
+        for f in futs:
+            exc = f.exception(timeout=600)
+            if exc is None:
+                ok += 1
+                if f.result().stats["degradation"]["level"] > 0:
+                    degraded += 1
+            elif isinstance(exc, ServiceOverloadError):
+                shed += 1
+            else:
+                raise AssertionError(f"untyped failure escaped: {exc!r}")
+        wall = time.time() - t0
+        flt = svc.stats()["faults"]
+    finally:
+        svc.close()
+    assert ok + shed == R, (ok, shed, R)
+    emit(f"serve_overload/fault_sweep/{R}x_rgg{n}", wall * 1e6,
+         f"ok={ok} shed={shed} degraded={degraded} retries={flt['retries']}")
+    section["fault_sweep"] = {
+        "requests": R, "ok": ok, "shed": shed, "degraded": degraded,
+        "dispatch_failures": flt["dispatch_failures"],
+        "retries": flt["retries"], "contained": flt["contained"],
+        "wall_s": wall,
+    }
+
+
 SECTIONS = {
     "quality_profiles": bench_quality_profiles,
     "thread_strategies": bench_thread_strategies,
@@ -375,6 +499,7 @@ SECTIONS = {
     "refine_backends": bench_refine_backends,
     "kernels": bench_kernels,
     "serve": bench_serve,
+    "serve_overload": bench_serve_overload,
 }
 
 
@@ -384,7 +509,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=["small", "large", "paper"], default="small")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SECTIONS))
-    ap.add_argument("--out", default="BENCH_PR5.json",
+    ap.add_argument("--out", default="BENCH_PR6.json",
                     help="telemetry JSON path ('' disables)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None

@@ -75,12 +75,18 @@ def shared_map(g: Graph, h: Hierarchy, config: SharedMapConfig | None = None) ->
     return shared_map_direct(g, h, cfg)
 
 
-def shared_map_direct(g: Graph, h: Hierarchy, cfg: SharedMapConfig) -> SharedMapResult:
+def shared_map_direct(g: Graph, h: Hierarchy, cfg: SharedMapConfig,
+                      checkpoint=None) -> SharedMapResult:
     """The in-process path (no service indirection); also the fallback the
-    service itself uses for the non-plannable strategies (naive/queue)."""
+    service itself uses for the non-plannable strategies (naive/queue).
+
+    ``checkpoint`` (optional zero-arg callable) is invoked between
+    multisection levels; raising inside it aborts the run — the service
+    uses it to enforce deadlines and shutdown on fallback requests."""
     res = hierarchical_multisection(
         g, h, eps=cfg.eps, preset=cfg.preset, strategy=cfg.strategy,
         seed=cfg.seed, adaptive=cfg.adaptive, backend=cfg.backend,
+        checkpoint=checkpoint,
     )
     res.pe_of = finalize_mapping(g, h, cfg, res.pe_of, res.stats)
     return SharedMapResult(pe_of=res.pe_of, J=evaluate_J(g, h, res.pe_of), stats=res.stats)

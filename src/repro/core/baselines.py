@@ -36,6 +36,20 @@ def random_mapping(g: Graph, h: Hierarchy, seed: int = 0) -> np.ndarray:
     return rng.permutation(k)[pe]
 
 
+def greedy_baseline(g: Graph, h: Hierarchy, seed: int = 0) -> np.ndarray:
+    """Cheapest non-trivial mapping: contiguous-block partition + greedy
+    quotient-graph placement (no multisection, no refinement, O(m + k^2)).
+
+    This is the FLOOR of the mapping service's graceful-degradation ladder
+    (serve/mapper): under hard overload or repeated kernel-path failures it
+    still beats `identity_mapping` (the greedy pass packs heavily
+    communicating blocks into near PEs) while costing microseconds."""
+    part = identity_mapping(g, h, seed)
+    C = quotient_matrix(g, part, h.k)
+    perm = greedy_mapping(C, h)
+    return perm[part]
+
+
 def global_multisection(
     g: Graph, h: Hierarchy, eps: float = 0.03, preset: str = "eco",
     strategy: str = "bucket", seed: int = 0, backend: str = "auto",

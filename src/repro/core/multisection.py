@@ -406,8 +406,10 @@ class LevelPlanner:
 
     def __init__(self, g: Graph, h: Hierarchy, eps: float = 0.03,
                  preset: str = "eco", seed: int = 0, adaptive: bool = True,
-                 backend: str = "auto", bucketed: bool = True):
+                 backend: str = "auto", bucketed: bool = True,
+                 checkpoint: Callable[[], None] | None = None):
         self.h = h
+        self.checkpoint = checkpoint
         self.eps = eps
         self.preset = preset
         self.seed = seed
@@ -441,6 +443,11 @@ class LevelPlanner:
         if self._done:
             return []
         if self._groups is None:
+            # cooperative cancellation checkpoint: a deadline/shutdown hook
+            # may abort here, BETWEEN levels, instead of after the full
+            # pipeline (serve/mapper deadlines, close(wait=False)).
+            if self.checkpoint is not None:
+                self.checkpoint()
             for hg in self._current:
                 if hg.depth == 0:
                     self.pe_of[hg.orig_ids] = hg.pe_base
@@ -530,15 +537,22 @@ def hierarchical_multisection(
     seed: int = 0,
     adaptive: bool = True,
     backend: str = "auto",
+    checkpoint: Callable[[], None] | None = None,
 ) -> MultisectionResult:
-    """Partition ``g`` along ``h`` and return the (identity) mapping."""
+    """Partition ``g`` along ``h`` and return the (identity) mapping.
+
+    ``checkpoint`` is an optional cooperative-cancellation hook invoked
+    between levels (and before each naive/queue task); raising inside it
+    aborts the multisection — the mechanism behind service deadlines.
+    """
     backend = resolve_backend(backend)
     if strategy in ("layer", "bucket"):
         # the planner path: identical planning to serve/mapper, each group
         # executed alone (no cross-request members to coalesce here).
         planner = LevelPlanner(g, h, eps=eps, preset=preset, seed=seed,
                                adaptive=adaptive, backend=backend,
-                               bucketed=(strategy == "bucket"))
+                               bucketed=(strategy == "bucket"),
+                               checkpoint=checkpoint)
         while True:
             groups = planner.plan()
             if not groups:
@@ -566,10 +580,13 @@ def hierarchical_multisection(
             stats["padded_vertex_work"] += int(batchN)
             stats["real_vertex_work"] += int(realn)
 
-    ctx = (h, eps, preset, seed, total_weight, adaptive, backend, record, cache_stats)
+    ctx = (h, eps, preset, seed, total_weight, adaptive, backend, record,
+           cache_stats, checkpoint)
     current = [root]
     t0 = time.time()
     while current:
+        if checkpoint is not None:
+            checkpoint()
         nxt: list[_HostGraph] = []
         leaves = [hg for hg in current if hg.depth == 0]
         for hg in leaves:
@@ -597,9 +614,12 @@ def _children_of(hg: _HostGraph, part: np.ndarray, h: Hierarchy) -> list[_HostGr
 
 
 def _run_naive(work, ctx):
-    h, eps, preset, seed, total_weight, adaptive, backend, record, cache_stats = ctx
+    (h, eps, preset, seed, total_weight, adaptive, backend, record,
+     cache_stats, checkpoint) = ctx
     out = []
     for hg in work:
+        if checkpoint is not None:
+            checkpoint()
         arity = h.a[hg.depth - 1]
         e = _eps_for(hg, h, eps, total_weight, adaptive)
         part = _partition_one(hg, arity, e, preset, seed * 100003 + hg.uid,
@@ -628,7 +648,8 @@ def _run_queue(work, ctx, workers: int | None = None):
     if workers is None:
         import os
         workers = max(2, min(4, os.cpu_count() or 2))
-    h, eps, preset, seed, total_weight, adaptive, backend, record, cache_stats = ctx
+    (h, eps, preset, seed, total_weight, adaptive, backend, record,
+     cache_stats, checkpoint) = ctx
     cv = threading.Condition()
     heap: list[tuple[int, int, _HostGraph]] = []
     out: list[_HostGraph] = []
@@ -648,6 +669,8 @@ def _run_queue(work, ctx, workers: int | None = None):
                     return
                 task = heapq.heappop(heap)[2]
             try:
+                if checkpoint is not None:
+                    checkpoint()  # cooperative cancellation per task
                 arity = h.a[task.depth - 1]
                 e = _eps_for(task, h, eps, total_weight, adaptive)
                 part = _partition_one(task, arity, e, preset,

@@ -1,44 +1,71 @@
-"""Batched, cached mapping service (DESIGN.md §9).
+"""Batched, cached, overload-safe mapping service (DESIGN.md §9–§10).
 
 Turns the one-shot ``shared_map`` entry point into a long-lived service for
-heavy mapping traffic. Three mechanisms, all bit-transparent to callers:
+heavy mapping traffic. Three throughput mechanisms, all bit-transparent:
 
 * **Cross-request coalescing** — every in-flight request runs on a
   ``core.multisection.LevelPlanner``; a single scheduler thread gathers the
   per-level :class:`PlanGroup`s of ALL active planners, merges groups with
   equal ``exec_key`` and dispatches each merged set as ONE stacked vmapped
   ``_batched_partition`` call. vmap lanes are independent, so each
-  request's result is bit-identical to the direct path (tested) while the
-  per-dispatch overheads (Python jit dispatch, host stacking, transfers,
-  device sync) are paid once per shape instead of once per request.
+  request's result is bit-identical to the direct path (tested).
 * **Content-addressed result cache** — requests are fingerprinted by their
   real CSR arrays + hierarchy vector + config; repeats are answered from
   an LRU cache in microseconds. Concurrent identical requests dedup onto
   one in-flight computation.
 * **Warmup** — :meth:`MappingService.warmup` pre-populates the process's
-  jit/program cache for the expected bucket shapes so first-request
-  latency is predictable instead of compile-bound.
+  jit/program cache for the expected bucket shapes.
+
+And a robustness layer (PR 6) that makes the service survive bursty,
+adversarial load — mapping sits in the launch critical path:
+
+* **Admission control + backpressure** — bounded waiting queue and bounded
+  in-flight set (``serve/admission.py``). Overflow is LOAD-SHED with an
+  explicit :class:`ServiceOverloadError` (never silent queueing); a
+  higher-priority arrival preempts the lowest-priority waiter instead.
+  ``submit(..., deadline_s=...)`` cancels work past its deadline both in
+  the queue and mid-pipeline (cooperative checkpoints between
+  multisection levels).
+* **Fault containment + retries** — a failed dispatch fails only the
+  requests riding in it: the merged batch is re-executed per request
+  (isolation), transient errors (injected faults, OOM/RESOURCE_EXHAUSTED)
+  are retried with exponential backoff, and the scheduler thread never
+  dies. Every accepted Future resolves — with a result or a typed error —
+  on success, failure, deadline, ``close()``, or interpreter teardown.
+* **Graceful degradation** — under overload (opt-in) or after repeated
+  transient failures (default), requests fall down a quality ladder:
+  cached-nearby result → ``fast`` preset → greedy baseline
+  (``core/baselines.greedy_baseline``); the level taken is reported in
+  ``stats["degradation"]``. The serving-side analogue of the paper
+  family's fast/eco/strong quality spectrum.
+* **Observability + fault injection** — a pluggable :class:`Tracker`
+  (``serve/tracker.py``) streams admission/shed/retry/deadline/cache
+  counters to log, memory, or JSON-lines sinks, and a seeded
+  ``repro.faults.FaultInjector`` exercises the dispatch/cache/finalize
+  seams deterministically (shared with the trainer).
 
 Usage::
 
-    svc = MappingService()
-    with svc.installed():          # route shared_map through the service
-        res = shared_map(g, h)     # coalesced + cached transparently
-    # or explicitly:
-    fut = svc.submit(g, h, cfg)    # concurrent.futures.Future
-    res = await svc.amap(g, h)     # asyncio
+    svc = MappingService(tracker=JsonlTracker("mapper.jsonl"))
+    with svc.installed():              # route shared_map through the service
+        res = shared_map(g, h)         # coalesced + cached transparently
+    fut = svc.submit(g, h, cfg, priority=1, deadline_s=0.5)
+    res = await svc.amap(g, h)
     svc.close()
 
 The non-plannable strategies (``naive``/``queue``) fall back to the direct
-path on a small worker pool — still cached, never coalesced.
+path on a small worker pool — still cached and admission-controlled,
+never coalesced.
 """
 from __future__ import annotations
 
 import asyncio
+import atexit
 import dataclasses
 import hashlib
 import threading
 import time
+import weakref
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 from contextlib import contextmanager
@@ -47,24 +74,39 @@ import numpy as np
 
 from repro.core import api as capi
 from repro.core.api import SharedMapConfig, SharedMapResult
+from repro.core.baselines import greedy_baseline
 from repro.core.graph import Graph, from_edges
 from repro.core.hierarchy import Hierarchy
 from repro.core.mapping import evaluate_J
-from repro.core.multisection import (LevelPlanner, PlanGroup, _ell_deg_for,
-                                     _next_pow2, dispatch_group_batch,
+from repro.core.multisection import (STRATEGIES, LevelPlanner, PlanGroup,
+                                     _ell_deg_for, _next_pow2,
+                                     dispatch_group_batch,
                                      execute_group_batch, fetch_group_batch,
                                      host_graph_from)
 from repro.core.partition import num_levels
 from repro.core.refine import resolve_backend
+from repro.faults import NULL_INJECTOR, FaultInjector
+from repro.serve.admission import (ADMIT, ADMIT_DEGRADED, PREEMPT, SHED,
+                                   AdmissionController, DeadlineExceededError,
+                                   RetryPolicy, ServiceClosedError,
+                                   ServiceOverloadError)
+from repro.serve.tracker import NULL_TRACKER, Tracker, safe_emit
 
 _PLANNABLE = ("bucket", "layer")
+_PRESETS = ("fast", "eco", "strong")
+
+# degradation ladder levels (stats["degradation"]["level"])
+DEGRADE_FULL = 0           # full-quality result (the normal path)
+DEGRADE_CACHED_NEARBY = 1  # cached result for the same graph, other config
+DEGRADE_FAST_PRESET = 2    # recomputed with the cheapest preset
+DEGRADE_GREEDY = 3         # greedy baseline floor (no multisection)
 
 
-def request_fingerprint(g: Graph, h: Hierarchy, cfg: SharedMapConfig) -> bytes:
-    """Content address of a mapping request: the REAL CSR arrays (padding
-    never affects planning — the planner re-pads from real sizes), the
-    hierarchy vectors and every config field that influences the result.
-    ``backend`` enters resolved, so auto/xla hit the same entry off-TPU."""
+def graph_fingerprint(g: Graph, h: Hierarchy) -> bytes:
+    """Content address of the (graph, hierarchy) pair alone — the REAL CSR
+    arrays (padding never affects planning) plus the hierarchy vectors.
+    Keys the degradation ladder's cached-nearby index: any cached result
+    for the same graph+hierarchy is 'nearby' whatever its config."""
     n = int(g.n)
     m = int(g.m)
     hs = hashlib.blake2b(digest_size=16)
@@ -73,21 +115,67 @@ def request_fingerprint(g: Graph, h: Hierarchy, cfg: SharedMapConfig) -> bytes:
         a = np.ascontiguousarray(arr)
         hs.update(str(a.dtype).encode())
         hs.update(a.tobytes())
-    hs.update(repr((n, m, tuple(h.a), tuple(h.d), float(cfg.eps), cfg.preset,
-                    cfg.strategy, int(cfg.seed), bool(cfg.adaptive),
-                    resolve_backend(cfg.backend),
+    hs.update(repr((n, m, tuple(h.a), tuple(h.d))).encode())
+    return hs.digest()
+
+
+def request_fingerprint(g: Graph, h: Hierarchy, cfg: SharedMapConfig) -> bytes:
+    """Content address of a mapping request: the graph fingerprint plus
+    every config field that influences the result. ``backend`` enters
+    resolved, so auto/xla hit the same entry off-TPU."""
+    hs = hashlib.blake2b(digest_size=16)
+    hs.update(graph_fingerprint(g, h))
+    hs.update(repr((float(cfg.eps), cfg.preset, cfg.strategy, int(cfg.seed),
+                    bool(cfg.adaptive), resolve_backend(cfg.backend),
                     bool(cfg.refine_mapping))).encode())
     return hs.digest()
 
 
-@dataclasses.dataclass
+def validate_request(g: Graph, h: Hierarchy, cfg: SharedMapConfig) -> None:
+    """Reject malformed requests at the service boundary with a clear
+    ``ValueError`` instead of an opaque scheduler-thread error surfacing
+    through the Future (or worse, garbage output)."""
+    n = int(g.n)
+    m = int(g.m)
+    if n <= 0:
+        raise ValueError("empty graph: n=0 vertices (nothing to map)")
+    if n > g.N or m > g.M:
+        raise ValueError(f"graph counts exceed padded shapes: "
+                         f"n={n} > N={g.N} or m={m} > M={g.M}")
+    if h.k > n:
+        raise ValueError(f"hierarchy needs k={h.k} PEs but the graph has "
+                         f"only n={n} vertices (k > N is unmappable)")
+    if m > 0:
+        rows = np.asarray(g.rows)[:m]
+        cols = np.asarray(g.cols)[:m]
+        if int(rows.min()) < 0 or int(rows.max()) >= n \
+                or int(cols.min()) < 0 or int(cols.max()) >= n:
+            raise ValueError(f"edge endpoints out of range [0, {n}): "
+                             "rows/cols reference padding or negative ids")
+    if not (0.0 < float(cfg.eps) < 1.0):
+        raise ValueError(f"imbalance eps must be in (0, 1), got {cfg.eps}")
+    if cfg.strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {cfg.strategy!r}; "
+                         f"expected one of {STRATEGIES}")
+    if cfg.preset not in _PRESETS:
+        raise ValueError(f"unknown preset {cfg.preset!r}; "
+                         f"expected one of {_PRESETS}")
+
+
+@dataclasses.dataclass(eq=False)  # identity equality: requests live in lists
 class _Request:
     g: Graph
     h: Hierarchy
     cfg: SharedMapConfig
     fp: bytes
+    gfp: bytes
     futures: list[Future]
     planner: LevelPlanner | None = None
+    priority: int = 0
+    deadline: float | None = None   # absolute time.monotonic()
+    seq: int = 0
+    started: bool = False           # counted in admission.inflight
+    degradation: dict | None = None  # set when served below full quality
 
 
 def _dummy_host_graph(N: int, M: int):
@@ -99,43 +187,95 @@ def _dummy_host_graph(N: int, M: int):
     return host_graph_from(from_edges(N, u, u + 1, N=N, M=M))
 
 
+# Services alive at interpreter exit: fail their pending futures instead of
+# leaking them when the daemon scheduler thread is killed mid-flight.
+_LIVE_SERVICES: "weakref.WeakSet[MappingService]" = weakref.WeakSet()
+
+
+@atexit.register
+def _close_live_services() -> None:
+    for svc in list(_LIVE_SERVICES):
+        try:
+            svc.close(wait=False)
+        except Exception:
+            pass
+
+
 class MappingService:
     """Async mapping service: concurrent ``(Graph, Hierarchy, config)``
-    requests, coalesced dispatches, LRU result cache, warmup.
+    requests, coalesced dispatches, LRU result cache, warmup, admission
+    control, deadlines, fault containment, graceful degradation.
 
     Parameters
     ----------
     cache_entries: LRU bound of the result cache (0 disables caching).
     batch_window_s: how long the scheduler waits after a request arrives
         on an idle service before planning, so a concurrent burst lands in
-        the same coalesced dispatches. In-flight requests always coalesce
-        regardless of the window.
+        the same coalesced dispatches.
     merge_across_requests: dispatch same-``exec_key`` groups of different
-        requests as one batch (False = per-request dispatches; the service
-        then only adds caching and the async front).
-    pad_batch_pow2: pad merged batches to the next power of two (spare
-        lanes replicate the last member and are dropped) so XLA compiles
-        O(log B) batch widths per shape instead of one per distinct B —
-        the knob that makes :meth:`warmup` coverage feasible.
-    fallback_workers: thread pool size for the non-plannable strategies.
+        requests as one batch (False = per-request dispatches).
+    pad_batch_pow2: pad merged batches to the next power of two so XLA
+        compiles O(log B) batch widths per shape.
+    fallback_workers: thread pool size for the non-plannable strategies,
+        finalization, and degraded reruns.
+    max_inflight: bound on concurrently ACTIVE requests (planners being
+        stepped + fallback jobs); excess waits in the queue (backpressure).
+    max_queue: bound on accepted-but-waiting requests; overflow is shed
+        with :class:`ServiceOverloadError` (or preempts a lower-priority
+        waiter, or degrades — see ``degrade_on_overload``).
+    degrade_at: fraction of ``max_queue`` at which new arrivals are served
+        degraded instead of full quality (only with ``degrade_on_overload``).
+    degrade_on_overload: serve overflow along the quality ladder
+        (cached-nearby → fast preset → greedy) instead of shedding it.
+        Off by default: explicit load-shedding is the predictable contract;
+        opt in for availability-over-quality deployments.
+    degrade_on_failure: after transient-failure retries are exhausted,
+        serve the request degraded instead of failing its Future (default
+        on — deterministic errors always propagate regardless).
+    retry: :class:`RetryPolicy` for transient dispatch/finalize failures.
+    tracker: metrics sink (``serve/tracker.py``); sink errors never
+        propagate into the serving path.
+    fault_injector: seeded ``repro.faults.FaultInjector`` exercised at the
+        dispatch/cache/finalize seams (tests/benchmarks).
+    validate: check requests at the boundary (``validate_request``) and
+        raise ``ValueError`` synchronously from :meth:`submit`.
     """
 
     def __init__(self, cache_entries: int = 256, batch_window_s: float = 0.002,
                  merge_across_requests: bool = True, pad_batch_pow2: bool = True,
-                 fallback_workers: int = 2):
+                 fallback_workers: int = 2, max_inflight: int = 64,
+                 max_queue: int = 512, degrade_at: float = 0.75,
+                 degrade_on_overload: bool = False,
+                 degrade_on_failure: bool = True,
+                 retry: RetryPolicy | None = None,
+                 tracker: Tracker = NULL_TRACKER,
+                 fault_injector: FaultInjector = NULL_INJECTOR,
+                 validate: bool = True):
         self.cache_entries = int(cache_entries)
         self.batch_window_s = float(batch_window_s)
         self.merge_across_requests = bool(merge_across_requests)
         self.pad_batch_pow2 = bool(pad_batch_pow2)
+        self.degrade_on_overload = bool(degrade_on_overload)
+        self.degrade_on_failure = bool(degrade_on_failure)
+        self.validate = bool(validate)
+        self.retry = retry or RetryPolicy()
+        self.tracker = tracker
+        self.faults = fault_injector
+        self.admission = AdmissionController(max_inflight=max_inflight,
+                                             max_queue=max_queue,
+                                             degrade_at=degrade_at)
         self._cv = threading.Condition()
         self._queue: list[_Request] = []
         self._pending: dict[bytes, _Request] = {}  # queued + active, by fp
+        self._seq = 0
         self._closed = False
+        self._abort = False
         self._thread: threading.Thread | None = None
         self._fallback = ThreadPoolExecutor(
             max_workers=max(1, fallback_workers),
             thread_name_prefix="mapper-fallback")
         self._cache: OrderedDict[bytes, SharedMapResult] = OrderedDict()
+        self._by_graph: dict[bytes, bytes] = {}  # gfp -> freshest cached fp
         self._lock = threading.Lock()  # cache + telemetry
         self.telemetry = {
             "requests": 0,
@@ -145,16 +285,40 @@ class MappingService:
                          "padded_lanes": 0},
             "compile_cache": {"hits": 0, "misses": 0},
             "warmup": {"programs": 0, "seconds": 0.0},
+            "faults": {"dispatch_failures": 0, "retries": 0, "isolated": 0,
+                       "contained": 0, "cache_faults": 0, "degraded": 0},
         }
+        _LIVE_SERVICES.add(self)
 
     # ------------------------------------------------------------- frontend
 
     def submit(self, g: Graph, h: Hierarchy,
-               config: SharedMapConfig | None = None) -> Future:
-        """Enqueue a mapping request; returns a Future[SharedMapResult]."""
+               config: SharedMapConfig | None = None, *,
+               priority: int = 0, deadline_s: float | None = None,
+               on_shed: str = "raise") -> Future:
+        """Enqueue a mapping request; returns a Future[SharedMapResult].
+
+        ``priority``: larger = more important; under a full queue a
+        higher-priority arrival preempts the lowest-priority waiter.
+        ``deadline_s``: relative deadline; the request is cancelled with
+        :class:`DeadlineExceededError` if still queued — or between
+        multisection levels — once it expires.
+        ``on_shed``: "raise" surfaces :class:`ServiceOverloadError`
+        synchronously; "future" returns it on the Future instead (what
+        :meth:`submit_many` uses so one shed cannot poison a batch).
+
+        Raises ``ValueError`` synchronously for malformed inputs (empty
+        graph, k > n, out-of-range edges, bad eps/strategy/preset) and
+        :class:`ServiceClosedError` after :meth:`close`.
+        """
         cfg = config or SharedMapConfig()
-        fp = request_fingerprint(g, h, cfg)
+        if self.validate:
+            validate_request(g, h, cfg)
         fut: Future = Future()
+        deadline = None
+        if deadline_s is not None:
+            deadline = time.monotonic() + float(deadline_s)
+        fp = request_fingerprint(g, h, cfg)
         cached = self._cache_get(fp)
         if cached is not None:
             fut.set_result(self._result_copy(cached, cache_hit=True))
@@ -162,9 +326,15 @@ class MappingService:
         with self._lock:
             self.telemetry["requests"] += 1
             self.telemetry["result_cache"]["misses"] += 1
+        safe_emit(self.tracker.count, "service.cache.miss")
+        if deadline is not None and deadline <= time.monotonic():
+            self._count_deadline_miss()
+            fut.set_exception(DeadlineExceededError(
+                f"deadline of {deadline_s}s already expired at submit"))
+            return fut
         with self._cv:
             if self._closed:
-                raise RuntimeError("MappingService is closed")
+                raise ServiceClosedError("MappingService is closed")
             inflight = self._pending.get(fp)
             if inflight is not None:
                 # identical request already queued/active: one computation
@@ -172,33 +342,125 @@ class MappingService:
                 with self._lock:
                     self.telemetry["inflight_dedup"] += 1
                 return fut
-            req = _Request(g=g, h=h, cfg=cfg, fp=fp, futures=[fut])
-            self._pending[fp] = req
-            self._queue.append(req)
-            self._ensure_thread()
-            self._cv.notify_all()
+            return self._admit_new(g, h, cfg, fp, fut, priority, deadline,
+                                   on_shed)
+
+    def _admit_new(self, g, h, cfg, fp, fut, priority, deadline,
+                   on_shed) -> Future:
+        """Admission decision for a non-cached, non-dedup request. Caller
+        holds ``_cv``."""
+        adm = self.admission
+        waiting = min(((r.priority, -r.seq) for r in self._queue),
+                      default=None)
+        decision = adm.decide(priority, waiting[0] if waiting else None,
+                              degrade_ok=self.degrade_on_overload)
+        degradation = None
+        if decision == PREEMPT:
+            victim = min(self._queue, key=lambda r: (r.priority, -r.seq))
+            self._queue.remove(victim)
+            adm.note_dequeued()
+            adm.note_shed(preempted=True)
+            safe_emit(self.tracker.count, "service.preempted")
+            safe_emit(self.tracker.event, "shed", reason="preempted",
+                      priority=victim.priority, by_priority=priority)
+            self._fail(victim, ServiceOverloadError(
+                "preempted by a higher-priority request",
+                queued=adm.queued, inflight=adm.inflight))
+            decision = ADMIT_DEGRADED if (
+                self.degrade_on_overload
+                and adm.queued >= adm.soft_bound()) else ADMIT
+        if decision == SHED:
+            if self.degrade_on_overload:
+                return self._serve_inline_degraded(g, h, cfg, fut,
+                                                  reason="overload")
+            adm.note_shed()
+            safe_emit(self.tracker.count, "service.shed")
+            safe_emit(self.tracker.event, "shed", reason="queue_full",
+                      queued=adm.queued, inflight=adm.inflight)
+            exc = ServiceOverloadError(
+                f"mapping queue full ({adm.queued} waiting, "
+                f"{adm.inflight} in flight); request shed",
+                queued=adm.queued, inflight=adm.inflight,
+                retry_after_s=0.05 * max(adm.queued, 1))
+            if on_shed == "raise":
+                raise exc
+            fut.set_exception(exc)
+            return fut
+        if decision == ADMIT_DEGRADED and cfg.preset != "fast":
+            # soft overload: trade quality for queue drain speed — the
+            # request is served with the cheapest preset, cached under the
+            # DEGRADED config's fingerprint (never the original's).
+            cfg = dataclasses.replace(cfg, preset="fast")
+            fp = request_fingerprint(g, h, cfg)
+            degradation = {"level": DEGRADE_FAST_PRESET,
+                           "mode": "fast_preset", "reason": "overload"}
+            adm.note_degraded()
+            self._count_fault("degraded")
+            safe_emit(self.tracker.count, "service.degraded",
+                      mode="fast_preset")
+            cached = self._cache_get(fp)
+            if cached is not None:
+                fut.set_result(self._result_copy(cached, cache_hit=True,
+                                                 degradation=degradation))
+                return fut
+            dedup = self._pending.get(fp)
+            if dedup is not None:
+                dedup.futures.append(fut)
+                return fut
+        self._seq += 1
+        req = _Request(g=g, h=h, cfg=cfg, fp=fp,
+                       gfp=graph_fingerprint(g, h), futures=[fut],
+                       priority=priority, deadline=deadline, seq=self._seq,
+                       degradation=degradation)
+        self._pending[fp] = req
+        self._queue.append(req)
+        adm.note_queued()
+        safe_emit(self.tracker.count, "service.admitted")
+        self._ensure_thread()
+        self._cv.notify_all()
         return fut
 
-    def submit_many(self, requests) -> list[Future]:
+    def submit_many(self, requests, *, priority: int = 0,
+                    deadline_s: float | None = None) -> list[Future]:
         """Atomically enqueue a burst of ``(g, h, config)`` requests.
 
         All of them are admitted in ONE scheduler iteration, so the merged
         batch compositions (and therefore the compiled batch widths) are
         deterministic for a given burst — independent of caller timing.
+
+        Per-request failures (validation errors, shed requests) come back
+        as failed Futures instead of raising, so one bad or shed request
+        never poisons its siblings in the batch.
         """
+        futs = []
         with self._cv:  # Condition wraps an RLock: nested submit is fine
-            futs = [self.submit(g, h, cfg) for (g, h, cfg) in requests]
+            for (g, h, cfg) in requests:
+                try:
+                    futs.append(self.submit(g, h, cfg, priority=priority,
+                                            deadline_s=deadline_s,
+                                            on_shed="future"))
+                except Exception as exc:
+                    f: Future = Future()
+                    f.set_exception(exc)
+                    futs.append(f)
         return futs
 
     def map(self, g: Graph, h: Hierarchy,
-            config: SharedMapConfig | None = None) -> SharedMapResult:
+            config: SharedMapConfig | None = None, *,
+            priority: int = 0,
+            deadline_s: float | None = None) -> SharedMapResult:
         """Blocking request (the ``shared_map`` route when installed)."""
-        return self.submit(g, h, config).result()
+        return self.submit(g, h, config, priority=priority,
+                           deadline_s=deadline_s).result()
 
     async def amap(self, g: Graph, h: Hierarchy,
-                   config: SharedMapConfig | None = None) -> SharedMapResult:
+                   config: SharedMapConfig | None = None, *,
+                   priority: int = 0,
+                   deadline_s: float | None = None) -> SharedMapResult:
         """Asyncio request."""
-        return await asyncio.wrap_future(self.submit(g, h, config))
+        return await asyncio.wrap_future(
+            self.submit(g, h, config, priority=priority,
+                        deadline_s=deadline_s))
 
     # -------------------------------------------------------------- warmup
 
@@ -260,21 +522,46 @@ class MappingService:
             capi.install_service(prev)
 
     def close(self, wait: bool = True) -> None:
-        """Drain in-flight requests and stop the scheduler."""
+        """Stop the service. ``wait=True`` drains: every accepted request
+        completes before return. ``wait=False`` aborts: every still-pending
+        Future is failed with :class:`ServiceClosedError` BEFORE this
+        returns (nothing leaks), and in-flight pipelines are cancelled at
+        their next cooperative checkpoint."""
         with self._cv:
             self._closed = True
+            if not wait:
+                self._abort = True
             self._cv.notify_all()
-        if self._thread is not None and wait:
-            self._thread.join()
-        self._fallback.shutdown(wait=wait)
+        if not wait:
+            self._fail_pending(ServiceClosedError(
+                "MappingService closed before the request completed"))
+        if self._thread is not None:
+            self._thread.join(None if wait else 2.0)
+        self._fallback.shutdown(wait=wait, cancel_futures=not wait)
         self.uninstall()
+        _LIVE_SERVICES.discard(self)
+        safe_emit(self.tracker.flush)
+
+    def _fail_pending(self, exc: BaseException) -> None:
+        """Synchronously fail every accepted-but-unresolved request (the
+        close(wait=False) / interpreter-teardown path)."""
+        with self._cv:
+            doomed = list(self._pending.values())
+            for _ in self._queue:
+                self.admission.note_dequeued()
+            self._queue.clear()
+        for req in doomed:
+            self._fail(req, exc)
 
     def __enter__(self) -> "MappingService":
         return self.install()
 
-    def __exit__(self, *exc) -> None:
+    def __exit__(self, exc_type, *exc) -> None:
         self.uninstall()
-        self.close()
+        # deterministic teardown: a clean exit drains (every Future
+        # resolves with its result); an exception exit aborts (every
+        # pending Future fails with ServiceClosedError, promptly).
+        self.close(wait=exc_type is None)
 
     def stats(self) -> dict:
         """Snapshot of the service telemetry."""
@@ -283,6 +570,8 @@ class MappingService:
                     for k, v in self.telemetry.items()}
             snap["result_cache"]["entries"] = len(self._cache)
             snap["result_cache"]["capacity"] = self.cache_entries
+        with self._cv:
+            snap["admission"] = self.admission.snapshot()
         return snap
 
     # ------------------------------------------------------------ scheduler
@@ -293,34 +582,83 @@ class MappingService:
                                             name="mapper-scheduler")
             self._thread.start()
 
+    def _queue_wait_timeout(self) -> float | None:
+        """Sleep bound while parked: wake for the earliest queued deadline."""
+        deadlines = [r.deadline for r in self._queue if r.deadline is not None]
+        if not deadlines:
+            return None
+        return max(min(deadlines) - time.monotonic(), 0.0)
+
+    def _sweep_expired_queue(self) -> None:
+        """Fail queued requests past their deadline. Caller holds ``_cv``."""
+        now = time.monotonic()
+        expired = [r for r in self._queue
+                   if r.deadline is not None and now > r.deadline]
+        for req in expired:
+            self._queue.remove(req)
+            self.admission.note_dequeued()
+            self._deadline_miss(req)
+
+    def _take_admissible(self) -> list[_Request]:
+        """Move queued requests into the in-flight set up to the bound,
+        highest priority (FIFO within a priority) first. Holds ``_cv``."""
+        self._sweep_expired_queue()
+        self._queue.sort(key=lambda r: (-r.priority, r.seq))
+        taken = []
+        while self._queue and self.admission.has_capacity():
+            req = self._queue.pop(0)
+            self.admission.note_dequeued()
+            self.admission.note_start()
+            req.started = True
+            taken.append(req)
+        return taken
+
     def _loop(self) -> None:
         active: list[_Request] = []
         while True:
             with self._cv:
-                while not self._queue and not active and not self._closed:
-                    self._cv.wait()
-                if self._closed and not self._queue and not active:
-                    return
-                newly, self._queue = self._queue, []
+                while True:
+                    self._sweep_expired_queue()
+                    if self._abort:
+                        # close(wait=False) already failed every pending
+                        # Future; just drop the in-flight state.
+                        return
+                    if self._closed and not self._queue and not active:
+                        return
+                    if active or (self._queue
+                                  and self.admission.has_capacity()):
+                        break
+                    self._cv.wait(self._queue_wait_timeout()
+                                  if self._queue else None)
+                newly = self._take_admissible()
             if newly and not active and self.batch_window_s > 0:
                 # idle service: hold the first arrivals briefly so a
                 # concurrent burst coalesces from level 0 on.
                 time.sleep(self.batch_window_s)
                 with self._cv:
-                    newly += self._queue
-                    self._queue = []
+                    newly += self._take_admissible()
             for req in newly:
                 try:
                     self._admit(req, active)
                 except BaseException as exc:  # fail fast, never hang callers
                     self._fail(req, exc)
-            try:
-                if active:
+            if active:
+                try:
                     self._step(active)
-            except BaseException as exc:
-                for req in active:
-                    self._fail(req, exc)
-                active = []
+                except BaseException as exc:
+                    # last-resort containment: _step already isolates
+                    # per-request failures, so reaching here means the
+                    # round itself broke — fail its requests, keep serving.
+                    for req in active:
+                        self._contain(req, exc)
+                    active.clear()
+
+    def _planner_checkpoint(self, req: _Request) -> None:
+        """Cooperative cancellation hook run between multisection levels."""
+        if self._abort:
+            raise ServiceClosedError("service aborted mid-pipeline")
+        if req.deadline is not None and time.monotonic() > req.deadline:
+            raise DeadlineExceededError("deadline exceeded mid-pipeline")
 
     def _admit(self, req: _Request, active: list[_Request]) -> None:
         if req.cfg.strategy in _PLANNABLE:
@@ -329,7 +667,8 @@ class MappingService:
                     req.g, req.h, eps=req.cfg.eps, preset=req.cfg.preset,
                     seed=req.cfg.seed, adaptive=req.cfg.adaptive,
                     backend=req.cfg.backend,
-                    bucketed=(req.cfg.strategy == "bucket"))
+                    bucketed=(req.cfg.strategy == "bucket"),
+                    checkpoint=lambda req=req: self._planner_checkpoint(req))
             except BaseException as exc:
                 self._fail(req, exc)
                 return
@@ -338,8 +677,24 @@ class MappingService:
             self._fallback.submit(self._run_fallback, req)
 
     def _step(self, active: list[_Request]) -> None:
-        """One coalesced execution round over all active planners."""
-        plans = [(req, req.planner.plan()) for req in active]
+        """One coalesced execution round over all active planners.
+
+        Failure containment: planning, dispatch and advance are guarded
+        per request or per merged set; a failure removes only the requests
+        it belongs to — the round (and the scheduler thread) survives.
+        """
+        now = time.monotonic()
+        for req in list(active):  # mid-pipeline deadline cancellation
+            if req.deadline is not None and now > req.deadline:
+                active.remove(req)
+                self._deadline_miss(req)
+        plans = []
+        for req in list(active):
+            try:
+                plans.append((req, req.planner.plan()))
+            except BaseException as exc:
+                active.remove(req)
+                self._contain(req, exc)
         merged: OrderedDict[tuple, list[tuple[_Request, int, PlanGroup]]] = \
             OrderedDict()
         for req, groups in plans:
@@ -350,16 +705,22 @@ class MappingService:
         inflight = []
         for entries in merged.values():
             groups = [e[2] for e in entries]
-            if self.merge_across_requests:
-                handles = [dispatch_group_batch(
-                    groups, self.telemetry["compile_cache"],
-                    pad_batch_pow2=self.pad_batch_pow2)]
-                dispatches = 1
-            else:
-                handles = [dispatch_group_batch(
-                    [gr], self.telemetry["compile_cache"]) for gr in groups]
-                dispatches = len(groups)
-            inflight.append((entries, handles))
+            try:
+                self.faults.check("dispatch")
+                if self.merge_across_requests:
+                    handles = [dispatch_group_batch(
+                        groups, self.telemetry["compile_cache"],
+                        pad_batch_pow2=self.pad_batch_pow2)]
+                    dispatches = 1
+                else:
+                    handles = [dispatch_group_batch(
+                        [gr], self.telemetry["compile_cache"])
+                        for gr in groups]
+                    dispatches = len(groups)
+            except BaseException as exc:
+                inflight.append((entries, None, exc))
+                continue
+            inflight.append((entries, handles, None))
             members = sum(len(gr.members) for gr in groups)
             with self._lock:
                 co = self.telemetry["coalesce"]
@@ -368,17 +729,39 @@ class MappingService:
                 co["members"] += members
                 if self.merge_across_requests and self.pad_batch_pow2:
                     co["padded_lanes"] += _next_pow2(members) - members
-        results: dict[tuple[int, int], np.ndarray] = {}
-        for entries, handles in inflight:
-            outs = [o for hd in handles for o in fetch_group_batch(hd)]
-            for (req, gi, _), out in zip(entries, outs):
-                results[(id(req), gi)] = out
+        results: dict[tuple[int, int], object] = {}
+        for entries, handles, exc in inflight:
+            if exc is None:
+                try:
+                    outs = [o for hd in handles for o in fetch_group_batch(hd)]
+                    for (req, gi, _), out in zip(entries, outs):
+                        results[(id(req), gi)] = out
+                    continue
+                except BaseException as fetch_exc:
+                    exc = fetch_exc
+            # the merged dispatch failed: isolate — re-run each request's
+            # group alone so one poisoned member cannot fail its siblings.
+            self._count_fault("dispatch_failures")
+            safe_emit(self.tracker.event, "dispatch_failure",
+                      error=repr(exc), members=len(entries))
+            results.update(self._execute_isolated(entries))
         finished = []
         for req, groups in plans:
-            req.planner.advance([results[(id(req), gi)]
-                                 for gi in range(len(groups))])
-            if not req.planner.plan():
-                finished.append(req)
+            if req not in active:
+                continue
+            outs = [results.get((id(req), gi)) for gi in range(len(groups))]
+            errs = [o for o in outs if isinstance(o, BaseException)]
+            if errs:
+                active.remove(req)
+                self._contain(req, errs[0])
+                continue
+            try:
+                req.planner.advance(outs)
+                if not req.planner.plan():
+                    finished.append(req)
+            except BaseException as exc:
+                active.remove(req)
+                self._contain(req, exc)
         for req in finished:
             active.remove(req)
             # finalize (evaluate_J, cache insert, future resolution) on the
@@ -386,18 +769,76 @@ class MappingService:
             # of serializing behind them in the scheduler thread.
             self._fallback.submit(self._finalize_job, req, req.planner.result())
 
+    def _execute_isolated(self, entries) -> dict:
+        """Solo re-execution of each (request, group) from a failed merged
+        dispatch, with transient-failure retries. Maps (id(req), gi) to a
+        result array or the terminal exception."""
+        with self._lock:
+            self.telemetry["faults"]["isolated"] += len(entries)
+        out: dict[tuple[int, int], object] = {}
+        for (req, gi, gr) in entries:
+            try:
+                out[(id(req), gi)] = self._execute_with_retry(gr)
+            except BaseException as exc:
+                out[(id(req), gi)] = exc
+        return out
+
+    def _execute_with_retry(self, gr: PlanGroup) -> np.ndarray:
+        """One group's dispatch with the retry policy: transient failures
+        back off exponentially up to ``retry.max_retries``; deterministic
+        failures raise immediately (retrying them cannot help)."""
+        attempt = 0
+        while True:
+            try:
+                self.faults.check("dispatch")
+                return execute_group_batch(
+                    [gr], self.telemetry["compile_cache"])[0]
+            except BaseException as exc:
+                if not self.retry.is_transient(exc) \
+                        or attempt >= self.retry.max_retries:
+                    raise
+                backoff = self.retry.backoff_s(attempt)
+                self._count_fault("retries")
+                safe_emit(self.tracker.count, "service.retry")
+                safe_emit(self.tracker.event, "retry", attempt=attempt,
+                          backoff_s=backoff, error=repr(exc))
+                time.sleep(backoff)
+                attempt += 1
+
+    # ------------------------------------------------- fallback / finalize
+
     def _run_fallback(self, req: _Request) -> None:
-        try:
-            res = capi.shared_map_direct(req.g, req.h, req.cfg)
-            self._resolve(req, res)
-        except BaseException as exc:
-            self._fail(req, exc)
+        attempt = 0
+        while True:
+            try:
+                self._planner_checkpoint(req)  # deadline/abort before start
+                self.faults.check("dispatch")
+                res = capi.shared_map_direct(
+                    req.g, req.h, req.cfg,
+                    checkpoint=lambda: self._planner_checkpoint(req))
+                self._resolve(req, res)
+                return
+            except BaseException as exc:
+                if isinstance(exc, (DeadlineExceededError,
+                                    ServiceClosedError)):
+                    self._contain(req, exc)
+                    return
+                if self.retry.is_transient(exc) \
+                        and attempt < self.retry.max_retries:
+                    self._count_fault("retries")
+                    safe_emit(self.tracker.count, "service.retry")
+                    time.sleep(self.retry.backoff_s(attempt))
+                    attempt += 1
+                    continue
+                self._contain(req, exc)
+                return
 
     def _finalize_job(self, req: _Request, ms_result) -> None:
         try:
+            self.faults.check("finalize")
             self._finalize(req, ms_result)
         except BaseException as exc:
-            self._fail(req, exc)
+            self._contain(req, exc)
 
     def _finalize(self, req: _Request, ms_result) -> None:
         pe_of = capi.finalize_mapping(req.g, req.h, req.cfg,
@@ -407,25 +848,142 @@ class MappingService:
                               stats=ms_result.stats)
         self._resolve(req, res)
 
-    def _resolve(self, req: _Request, res: SharedMapResult) -> None:
-        self._cache_put(req.fp, res)
+    # -------------------------------------------- containment / degradation
+
+    def _contain(self, req: _Request, exc: BaseException) -> None:
+        """Terminal failure handler for one request: degrade transient
+        failures down the quality ladder (when enabled), propagate typed
+        errors for everything else. Never raises."""
+        if isinstance(exc, (DeadlineExceededError, ServiceClosedError)):
+            self._fail(req, exc)
+            return
+        self._count_fault("contained")
+        if self.degrade_on_failure and self.retry.is_transient(exc):
+            self._fallback.submit(self._run_degraded, req, exc)
+            return
+        self._fail(req, exc)
+
+    def _run_degraded(self, req: _Request, cause: BaseException) -> None:
+        """Serve ``req`` down the quality ladder after its full-quality
+        pipeline failed: cached-nearby → fast preset → greedy floor."""
+        try:
+            res = self._nearby_cached(req.gfp)
+            if res is not None:
+                self._resolve_degraded(req, res, DEGRADE_CACHED_NEARBY,
+                                       "cached_nearby", cause)
+                return
+            if req.cfg.preset != "fast":
+                try:
+                    self.faults.check("dispatch")
+                    res = capi.shared_map_direct(
+                        req.g, req.h,
+                        dataclasses.replace(req.cfg, preset="fast"),
+                        checkpoint=lambda: self._planner_checkpoint(req))
+                    self._resolve_degraded(req, res, DEGRADE_FAST_PRESET,
+                                           "fast_preset", cause)
+                    return
+                except (DeadlineExceededError, ServiceClosedError) as exc:
+                    self._fail(req, exc)
+                    return
+                except BaseException:
+                    pass  # keep falling down the ladder
+            pe_of = greedy_baseline(req.g, req.h, seed=req.cfg.seed)
+            res = SharedMapResult(
+                pe_of=pe_of, J=evaluate_J(req.g, req.h, pe_of),
+                stats={"strategy": "greedy_baseline",
+                       "backend": resolve_backend(req.cfg.backend)})
+            self._resolve_degraded(req, res, DEGRADE_GREEDY, "greedy", cause)
+        except BaseException as exc:  # even the floor failed: typed error out
+            self._fail(req, exc)
+
+    def _resolve_degraded(self, req: _Request, res: SharedMapResult,
+                          level: int, mode: str,
+                          cause: BaseException) -> None:
+        req.degradation = {"level": level, "mode": mode, "reason": "failure",
+                           "cause": repr(cause)}
+        self.admission.note_degraded()
+        self._count_fault("degraded")
+        safe_emit(self.tracker.count, "service.degraded", mode=mode)
+        safe_emit(self.tracker.event, "degraded", mode=mode,
+                  cause=repr(cause))
+        # degraded answers are never cached: a later identical request must
+        # get the full-quality result, not a frozen emergency one.
+        self._resolve(req, res, cache=False)
+
+    def _serve_inline_degraded(self, g, h, cfg, fut: Future,
+                               reason: str) -> Future:
+        """Hard-overload degradation, answered in the caller's thread (no
+        queue slot consumed): cached-nearby if available, else the greedy
+        floor — both cost microseconds. Caller holds ``_cv``."""
+        adm = self.admission
+        adm.note_degraded()
+        self._count_fault("degraded")
+        res = self._nearby_cached(graph_fingerprint(g, h))
+        if res is not None:
+            level, mode = DEGRADE_CACHED_NEARBY, "cached_nearby"
+        else:
+            pe_of = greedy_baseline(g, h, seed=cfg.seed)
+            res = SharedMapResult(
+                pe_of=pe_of, J=evaluate_J(g, h, pe_of),
+                stats={"strategy": "greedy_baseline",
+                       "backend": resolve_backend(cfg.backend)})
+            level, mode = DEGRADE_GREEDY, "greedy"
+        safe_emit(self.tracker.count, "service.degraded", mode=mode)
+        safe_emit(self.tracker.event, "degraded", mode=mode, reason=reason)
+        fut.set_result(self._result_copy(
+            res, cache_hit=(level == DEGRADE_CACHED_NEARBY),
+            degradation={"level": level, "mode": mode, "reason": reason}))
+        return fut
+
+    def _deadline_miss(self, req: _Request) -> None:
+        self._count_deadline_miss()
+        self._fail(req, DeadlineExceededError(
+            "deadline exceeded before the mapping completed"))
+
+    def _count_deadline_miss(self) -> None:
         with self._cv:
-            self._pending.pop(req.fp, None)
+            self.admission.note_deadline_miss()
+        safe_emit(self.tracker.count, "service.deadline_miss")
+
+    def _count_fault(self, name: str) -> None:
+        with self._lock:
+            self.telemetry["faults"][name] += 1
+
+    # ------------------------------------------------------- future plumbing
+
+    def _resolve(self, req: _Request, res: SharedMapResult,
+                 cache: bool = True) -> None:
+        if cache:
+            self._cache_put(req.fp, req.gfp, res)
+        self._finish_bookkeeping(req)
         for fut in req.futures:
             if not fut.done():  # a caller may have cancelled its Future
-                fut.set_result(self._result_copy(res, cache_hit=False))
+                fut.set_result(self._result_copy(
+                    res, cache_hit=False, degradation=req.degradation))
 
     def _fail(self, req: _Request, exc: BaseException) -> None:
-        with self._cv:
-            self._pending.pop(req.fp, None)
+        self._finish_bookkeeping(req)
         for fut in req.futures:
             if not fut.done():
                 fut.set_exception(exc)
+
+    def _finish_bookkeeping(self, req: _Request) -> None:
+        with self._cv:
+            self._pending.pop(req.fp, None)
+            if req.started:
+                req.started = False
+                self.admission.note_done()
+            self._cv.notify_all()  # capacity freed: wake the scheduler
 
     # ---------------------------------------------------------- result cache
 
     def _cache_get(self, fp: bytes) -> SharedMapResult | None:
         if self.cache_entries <= 0:
+            return None
+        try:
+            self.faults.check("cache")
+        except BaseException:  # contained: an injected cache fault = a miss
+            self._count_fault("cache_faults")
             return None
         with self._lock:
             res = self._cache.get(fp)
@@ -433,19 +991,41 @@ class MappingService:
                 self._cache.move_to_end(fp)
                 self.telemetry["requests"] += 1
                 self.telemetry["result_cache"]["hits"] += 1
-            return res
+        if res is not None:
+            safe_emit(self.tracker.count, "service.cache.hit")
+        return res
 
-    def _cache_put(self, fp: bytes, res: SharedMapResult) -> None:
+    def _cache_put(self, fp: bytes, gfp: bytes, res: SharedMapResult) -> None:
         if self.cache_entries <= 0:
+            return
+        try:
+            self.faults.check("cache")
+        except BaseException:  # contained: the request still resolves
+            self._count_fault("cache_faults")
             return
         with self._lock:
             self._cache[fp] = res
             self._cache.move_to_end(fp)
+            self._by_graph[gfp] = fp
             while len(self._cache) > self.cache_entries:
                 self._cache.popitem(last=False)
                 self.telemetry["result_cache"]["evictions"] += 1
+                safe_emit(self.tracker.count, "service.cache.eviction")
 
-    def _result_copy(self, res: SharedMapResult, cache_hit: bool) -> SharedMapResult:
+    def _nearby_cached(self, gfp: bytes) -> SharedMapResult | None:
+        """Freshest cached result for the same (graph, hierarchy) under ANY
+        config — step 1 of the degradation ladder."""
+        with self._lock:
+            fp = self._by_graph.get(gfp)
+            if fp is None:
+                return None
+            res = self._cache.get(fp)
+            if res is None:  # the entry was evicted; drop the dangling index
+                self._by_graph.pop(gfp, None)
+            return res
+
+    def _result_copy(self, res: SharedMapResult, cache_hit: bool,
+                     degradation: dict | None = None) -> SharedMapResult:
         """Fresh result per caller: private pe_of, stats annotated with the
         service telemetry (the compute stats themselves are shared refs on
         cache hits — treat them as read-only)."""
@@ -456,4 +1036,6 @@ class MappingService:
         stats["result_cache"] = rc
         stats["service"] = {"merge_across_requests": self.merge_across_requests,
                             "pad_batch_pow2": self.pad_batch_pow2}
+        stats["degradation"] = degradation or {"level": DEGRADE_FULL,
+                                               "mode": "full", "reason": ""}
         return SharedMapResult(pe_of=res.pe_of.copy(), J=res.J, stats=stats)

@@ -1,0 +1,149 @@
+"""Pluggable metrics trackers for the mapping service (ROADMAP item 1).
+
+PR 5's service telemetry (``stats["result_cache"]``, coalescing counters)
+lived only in the process and died with it. A :class:`Tracker` is the
+minimal sink abstraction that lets the same counters stream somewhere
+durable — a logger, an in-memory store (tests), a JSON-lines file (one
+dict per line, trivially ingestible), or several at once.
+
+Two verbs only, both fire-and-forget and exception-safe from the caller's
+point of view (a broken sink must never take down the serving path):
+
+* ``count(name, value=1, **tags)`` — monotonic counters (admission, shed,
+  retry, deadline-miss, cache hit/miss, degradation).
+* ``event(name, **fields)`` — discrete structured occurrences (a request
+  shed with its queue depth, a retry with its backoff).
+
+The service guards every emit with :func:`safe_emit`, so sinks may raise
+freely (see tests). Modeled on levanter's ``Tracker`` (ROADMAP pointer)
+but scoped to what the serving path needs today.
+"""
+from __future__ import annotations
+
+import json
+import logging
+import threading
+import time
+from typing import IO
+
+
+class Tracker:
+    """No-op base tracker; subclasses override ``count``/``event``."""
+
+    def count(self, name: str, value: int = 1, **tags) -> None:
+        pass
+
+    def event(self, name: str, **fields) -> None:
+        pass
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        self.flush()
+
+
+#: Shared no-op instance (the default when no tracker is wired).
+NULL_TRACKER = Tracker()
+
+
+def safe_emit(fn, *args, **kwargs) -> None:
+    """Invoke a tracker method, swallowing sink errors: observability must
+    never fail the serving path (regression-tested with a raising sink)."""
+    try:
+        fn(*args, **kwargs)
+    except Exception:
+        logging.getLogger(__name__).debug("tracker sink error", exc_info=True)
+
+
+class InMemoryTracker(Tracker):
+    """Accumulates counters and events in memory (tests, benchmarks)."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.counters: dict[str, float] = {}
+        self.events: list[dict] = []
+
+    def count(self, name: str, value: int = 1, **tags) -> None:
+        key = name if not tags else \
+            name + "{" + ",".join(f"{k}={v}" for k, v in sorted(tags.items())) + "}"
+        with self._lock:
+            self.counters[key] = self.counters.get(key, 0) + value
+
+    def event(self, name: str, **fields) -> None:
+        with self._lock:
+            self.events.append({"name": name, **fields})
+
+
+class LogTracker(Tracker):
+    """Streams counters/events through the stdlib logging machinery."""
+
+    def __init__(self, logger: logging.Logger | None = None,
+                 level: int = logging.INFO):
+        self.logger = logger or logging.getLogger("repro.serve")
+        self.level = level
+
+    def count(self, name: str, value: int = 1, **tags) -> None:
+        self.logger.log(self.level, "count %s += %s %s", name, value, tags or "")
+
+    def event(self, name: str, **fields) -> None:
+        self.logger.log(self.level, "event %s %s", name, fields)
+
+
+class JsonlTracker(Tracker):
+    """Appends one JSON object per emit to a file: a process-independent
+    record of the service's admission/shed/retry/cache history."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._lock = threading.Lock()
+        self._f: IO[str] | None = open(path, "a")
+
+    def _write(self, obj: dict) -> None:
+        line = json.dumps(obj, default=str)
+        with self._lock:
+            if self._f is None:
+                raise ValueError("JsonlTracker is closed")
+            self._f.write(line + "\n")
+
+    def count(self, name: str, value: int = 1, **tags) -> None:
+        self._write({"t": time.time(), "kind": "count", "name": name,
+                     "value": value, **tags})
+
+    def event(self, name: str, **fields) -> None:
+        self._write({"t": time.time(), "kind": "event", "name": name, **fields})
+
+    def flush(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.flush()
+
+    def close(self) -> None:
+        with self._lock:
+            if self._f is not None:
+                self._f.flush()
+                self._f.close()
+                self._f = None
+
+
+class CompositeTracker(Tracker):
+    """Fans every emit out to several sinks (e.g. log + jsonl)."""
+
+    def __init__(self, *trackers: Tracker):
+        self.trackers = tuple(trackers)
+
+    def count(self, name: str, value: int = 1, **tags) -> None:
+        for t in self.trackers:
+            safe_emit(t.count, name, value, **tags)
+
+    def event(self, name: str, **fields) -> None:
+        for t in self.trackers:
+            safe_emit(t.event, name, **fields)
+
+    def flush(self) -> None:
+        for t in self.trackers:
+            safe_emit(t.flush)
+
+    def close(self) -> None:
+        for t in self.trackers:
+            safe_emit(t.close)

@@ -21,22 +21,41 @@ import dataclasses
 import time
 from typing import Callable
 
+from repro.faults import FaultInjector, InjectedFault
 
-class InjectedFailure(RuntimeError):
-    """Raised by FailureInjector to simulate a node loss."""
+
+class InjectedFailure(InjectedFault):
+    """Raised by FailureInjector to simulate a node loss.
+
+    Subclasses the shared :class:`repro.faults.InjectedFault` so generic
+    fault-handling code (e.g. the mapping service's retry classifier) can
+    treat trainer failures uniformly; kept as its own name because the
+    restart loop and launch/train.py catch it specifically.
+    """
 
 
 @dataclasses.dataclass
 class FailureInjector:
-    """Deterministically fail at given steps (tests/examples)."""
+    """Deterministically fail at given steps (tests/examples).
+
+    Thin step-indexed front over :class:`repro.faults.FaultInjector`: the
+    trainer's "fail at step s, once" semantics are the ``fail_at`` mode of
+    the shared injector with the step passed as the explicit index.
+    """
 
     fail_at_steps: tuple[int, ...] = ()
     fired: set = dataclasses.field(default_factory=set)
 
+    def __post_init__(self):
+        self._inj = FaultInjector(fail_at={"train_step": self.fail_at_steps},
+                                  error_type=InjectedFailure)
+
     def check(self, step: int):
-        if step in self.fail_at_steps and step not in self.fired:
+        try:
+            self._inj.check("train_step", index=step)
+        except InjectedFailure:
             self.fired.add(step)
-            raise InjectedFailure(f"simulated node failure at step {step}")
+            raise
 
 
 @dataclasses.dataclass

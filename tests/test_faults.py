@@ -1,0 +1,114 @@
+"""Shared fault injection: determinism, matching modes, trainer back-compat."""
+import pytest
+
+from repro.faults import NULL_INJECTOR, FaultInjector, InjectedFault, _hash_uniform
+from repro.train.fault_tolerance import FailureInjector, InjectedFailure, run_with_restarts
+
+
+def test_null_injector_never_fires():
+    for i in range(100):
+        NULL_INJECTOR.check("dispatch")
+        NULL_INJECTOR.check("train_step", index=i)
+
+
+def test_fail_at_occurrence_fires_once_then_clears():
+    """fail_at matches the per-site occurrence counter; each (site, idx)
+    fires at most once — a retry of the same seam succeeds (the canonical
+    transient fault)."""
+    inj = FaultInjector(fail_at={"dispatch": (1,)})
+    inj.check("dispatch")                      # occurrence 0: clean
+    with pytest.raises(InjectedFault) as ei:
+        inj.check("dispatch")                  # occurrence 1: fires
+    assert ei.value.site == "dispatch"
+    assert ei.value.index == 1
+    assert ei.value.transient is True
+    inj.check("dispatch")                      # occurrence 2: clean again
+    assert inj.fired == [("dispatch", 1)]
+    assert inj.count("dispatch") == 3
+
+
+def test_explicit_index_mode_matches_value_not_counter():
+    """index= overrides the counter (the trainer's step-indexed mode)."""
+    inj = FaultInjector(fail_at={"train_step": (7,)})
+    inj.check("train_step", index=3)
+    with pytest.raises(InjectedFault):
+        inj.check("train_step", index=7)
+    inj.check("train_step", index=7)  # once per (site, idx): retry succeeds
+    assert inj.fired == [("train_step", 7)]
+
+
+def test_sites_are_independent():
+    inj = FaultInjector(fail_at={"cache": (0,)})
+    inj.check("dispatch")  # other sites untouched by the cache plan
+    with pytest.raises(InjectedFault):
+        inj.check("cache")
+    inj.check("finalize")
+
+
+def test_rate_mode_is_deterministic_across_instances():
+    """The rate draws are a pure function of (seed, site, count): two
+    injectors with the same plan fire on exactly the same occurrences,
+    regardless of interleaving."""
+    def pattern(seed):
+        inj = FaultInjector(seed=seed, rates={"dispatch": 0.3})
+        fired = []
+        for i in range(200):
+            try:
+                inj.check("dispatch")
+            except InjectedFault:
+                fired.append(i)
+        return fired
+
+    a, b = pattern(seed=5), pattern(seed=5)
+    assert a == b
+    assert 20 < len(a) < 120  # ~30% of 200, loose bounds
+    assert pattern(seed=6) != a  # seed actually enters the draw
+
+
+def test_hash_uniform_range_and_stability():
+    vals = [_hash_uniform(0, "s", i) for i in range(100)]
+    assert all(0.0 <= v < 1.0 for v in vals)
+    assert vals == [_hash_uniform(0, "s", i) for i in range(100)]
+
+
+def test_transient_flag_and_custom_error_type():
+    class BoomError(InjectedFault):
+        pass
+
+    inj = FaultInjector(fail_at={"x": (0,)}, transient=False,
+                        error_type=BoomError)
+    with pytest.raises(BoomError) as ei:
+        inj.check("x")
+    assert ei.value.transient is False
+
+
+def test_trainer_injector_back_compat():
+    """train.FailureInjector keeps its step-indexed API and fired set on
+    top of the shared injector; InjectedFailure is-a InjectedFault so the
+    service's retry classifier treats trainer faults uniformly."""
+    assert issubclass(InjectedFailure, InjectedFault)
+    inj = FailureInjector(fail_at_steps=(2, 4))
+    for step in (0, 1):
+        inj.check(step)
+    with pytest.raises(InjectedFailure):
+        inj.check(2)
+    inj.check(2)  # fires once per step
+    with pytest.raises(InjectedFailure):
+        inj.check(4)
+    assert inj.fired == {2, 4}
+
+
+def test_run_with_restarts_survives_injected_failures():
+    inj = FailureInjector(fail_at_steps=(3,))
+    state = {"step": 0, "runs": 0}
+
+    def run_fn(start_step):
+        state["runs"] += 1
+        while state["step"] < 6:
+            inj.check(state["step"])
+            state["step"] += 1
+        return state["step"]
+
+    assert run_with_restarts(run_fn, max_restarts=2) == 6
+    assert state["runs"] == 2
+    assert inj.fired == {3}

@@ -1,0 +1,543 @@
+"""Overload, deadlines, fault containment, and degradation for the service.
+
+Shares graph shapes with test_serve_mapper.py so full-suite runs reuse the
+same compiled executables.
+"""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.api import SharedMapConfig, shared_map_direct
+from repro.core.baselines import greedy_baseline
+from repro.core.hierarchy import Hierarchy
+from repro.core.mapping import evaluate_J
+from repro.core.multisection import clear_compile_cache
+from repro.faults import FaultInjector, InjectedFault
+from repro.serve.admission import (ADMIT, ADMIT_DEGRADED, PREEMPT, SHED,
+                                   AdmissionController, DeadlineExceededError,
+                                   RetryPolicy, ServiceClosedError,
+                                   ServiceOverloadError)
+from repro.serve.mapper import MappingService, validate_request
+from repro.serve.tracker import InMemoryTracker, JsonlTracker, Tracker
+
+H = Hierarchy(a=(4, 2), d=(1.0, 10.0))
+CFG = SharedMapConfig(preset="fast")
+
+
+@pytest.fixture(scope="module")
+def graphs():
+    return [G.gen_rgg(300, seed=40 + i) for i in range(4)]
+
+
+# ---------------------------------------------------------------- admission
+
+
+def test_admission_controller_decide_matrix():
+    adm = AdmissionController(max_inflight=2, max_queue=4, degrade_at=0.5)
+    assert adm.decide(0, None, degrade_ok=False) == ADMIT
+    adm.queued = 2  # at the soft watermark (0.5 * 4)
+    assert adm.decide(0, None, degrade_ok=True) == ADMIT_DEGRADED
+    assert adm.decide(0, None, degrade_ok=False) == ADMIT
+    adm.queued = 4  # at the hard bound
+    assert adm.decide(0, None, degrade_ok=False) == SHED  # nobody to evict
+    assert adm.decide(1, 0, degrade_ok=False) == PREEMPT  # strictly higher
+    assert adm.decide(0, 0, degrade_ok=False) == SHED     # ties never evict
+    assert adm.decide(0, 1, degrade_ok=False) == SHED
+
+
+def test_admission_controller_bounds_and_capacity():
+    adm = AdmissionController(max_inflight=1, max_queue=1, degrade_at=0.75)
+    assert adm.hard_bound() == 1
+    assert adm.soft_bound() == 0  # clamped inside [0, hard)
+    assert adm.has_capacity()
+    adm.note_start()
+    assert not adm.has_capacity()
+    adm.note_done()
+    adm.note_queued()
+    adm.note_shed()
+    adm.note_shed(preempted=True)
+    adm.note_deadline_miss()
+    snap = adm.snapshot()
+    assert snap["admitted"] == 1 and snap["shed"] == 1
+    assert snap["preempted"] == 1 and snap["deadline_miss"] == 1
+    zero = AdmissionController(max_queue=0)
+    assert zero.decide(0, None, degrade_ok=False) == SHED
+
+
+def test_retry_policy_backoff_and_transience():
+    rp = RetryPolicy(max_retries=3, backoff_base_s=0.01, backoff_factor=2.0)
+    assert rp.backoff_s(0) == pytest.approx(0.01)
+    assert rp.backoff_s(2) == pytest.approx(0.04)
+    assert rp.is_transient(InjectedFault("x", transient=True))
+    assert not rp.is_transient(InjectedFault("x", transient=False))
+    assert rp.is_transient(MemoryError())
+    assert rp.is_transient(RuntimeError("RESOURCE_EXHAUSTED: out of HBM"))
+    assert not rp.is_transient(ValueError("malformed"))
+
+
+# ----------------------------------------------------------------- overload
+
+
+def test_burst_shed_and_admitted_bit_identical(graphs):
+    """Closed-loop burst over the bounds: overflow gets a typed
+    ServiceOverloadError, admitted requests complete bit-identical to the
+    direct path."""
+    tr = InMemoryTracker()
+    svc = MappingService(max_inflight=1, max_queue=2, tracker=tr)
+    try:
+        # submit_many holds the scheduler lock across the whole burst, so
+        # the admission decisions are deterministic: 2 queued, 4 shed.
+        futs = svc.submit_many(
+            [(graphs[i % 4], H, SharedMapConfig(preset="fast", seed=i))
+             for i in range(6)])
+        shed = [f for f in futs if isinstance(f.exception(timeout=600),
+                                              ServiceOverloadError)]
+        done = [f for f in futs if f.exception(timeout=600) is None]
+        assert len(shed) == 4 and len(done) == 2
+        assert shed[0] is futs[2]  # FIFO admission: first two got in
+        exc = futs[2].exception()
+        assert exc.queued == 2 and exc.retry_after_s > 0
+        for i in (0, 1):
+            d = shared_map_direct(graphs[i], H,
+                                  SharedMapConfig(preset="fast", seed=i))
+            r = futs[i].result()
+            assert np.array_equal(d.pe_of, r.pe_of) and d.J == r.J
+            assert r.stats["degradation"]["level"] == 0
+        snap = svc.stats()["admission"]
+        assert snap["admitted"] == 2 and snap["shed"] == 4
+        assert tr.counters["service.shed"] == 4
+        assert tr.counters["service.admitted"] == 2
+    finally:
+        svc.close()
+
+
+def test_priority_preempts_lowest_waiter(graphs):
+    svc = MappingService(max_queue=1)
+    try:
+        with svc._cv:  # freeze the scheduler: decisions are deterministic
+            f_low = svc.submit(graphs[0], H, CFG, priority=0)
+            f_high = svc.submit(graphs[1], H, CFG, priority=5)
+        exc = f_low.exception(timeout=600)
+        assert isinstance(exc, ServiceOverloadError)
+        assert "preempted" in str(exc)
+        d = shared_map_direct(graphs[1], H, CFG)
+        r = f_high.result(timeout=600)
+        assert np.array_equal(d.pe_of, r.pe_of)
+        assert svc.stats()["admission"]["preempted"] == 1
+    finally:
+        svc.close()
+
+
+def test_priority_orders_execution(graphs):
+    order = []
+    svc = MappingService(max_inflight=1, batch_window_s=0.0)
+    try:
+        with svc._cv:
+            for gi, pri in ((0, 0), (1, 5), (2, 1)):
+                fut = svc.submit(graphs[gi], H, CFG, priority=pri)
+                fut.add_done_callback(lambda f, gi=gi: order.append(gi))
+            assert len(svc._queue) == 3
+        svc.close(wait=True)  # drain: all three resolve before return
+        assert order == [1, 2, 0]  # high priority first, FIFO below
+    finally:
+        svc.close()
+
+
+# ----------------------------------------------------------------- deadlines
+
+
+def test_deadline_expired_at_submit(graphs):
+    svc = MappingService()
+    try:
+        fut = svc.submit(graphs[0], H, SharedMapConfig(preset="fast", seed=99),
+                         deadline_s=0.0)
+        assert isinstance(fut.exception(timeout=5), DeadlineExceededError)
+        assert svc.stats()["admission"]["deadline_miss"] == 1
+    finally:
+        svc.close()
+
+
+def test_deadline_expires_in_queue(graphs):
+    import time
+    svc = MappingService()
+    try:
+        with svc._cv:  # hold the scheduler so the request stays queued
+            fut = svc.submit(graphs[0], H,
+                             SharedMapConfig(preset="fast", seed=98),
+                             deadline_s=0.01)
+            time.sleep(0.05)  # deadline passes while queued
+        # the sweep runs before any admission, so this is deterministic
+        assert isinstance(fut.exception(timeout=10), DeadlineExceededError)
+        # the service keeps serving afterwards
+        r = svc.map(graphs[0], H, CFG)
+        assert np.array_equal(r.pe_of, shared_map_direct(graphs[0], H, CFG).pe_of)
+    finally:
+        svc.close()
+
+
+def test_deadline_cancels_mid_pipeline(graphs):
+    """A short deadline on a cold (compile-bound) request is enforced at
+    the cooperative between-level checkpoints."""
+    clear_compile_cache()
+    jax.clear_caches()  # guarantee the first dispatch compiles (seconds)
+    svc = MappingService()
+    try:
+        fut = svc.submit(graphs[2], H, CFG, deadline_s=0.2)
+        assert isinstance(fut.exception(timeout=600), DeadlineExceededError)
+        # scheduler thread survived; the same request now completes
+        r = svc.map(graphs[2], H, CFG)
+        assert np.array_equal(r.pe_of, shared_map_direct(graphs[2], H, CFG).pe_of)
+    finally:
+        svc.close()
+
+
+def test_checkpoint_aborts_between_levels(graphs):
+    """The checkpoint hook threads through the direct path too, firing
+    between multisection levels."""
+    calls = []
+    shared_map_direct(graphs[0], H, CFG, checkpoint=lambda: calls.append(1))
+    assert len(calls) >= 2  # once per level at least
+
+    class Abort(Exception):
+        pass
+
+    seen = []
+
+    def ck():
+        seen.append(1)
+        if len(seen) == 2:
+            raise Abort()
+
+    with pytest.raises(Abort):
+        shared_map_direct(graphs[0], H, CFG, checkpoint=ck)
+    assert len(seen) == 2  # aborted at the second level boundary
+
+
+# ------------------------------------------------------- faults / containment
+
+
+def test_transient_dispatch_fault_retried_bit_identical(graphs):
+    """A transient fault in a merged dispatch isolates and retries; the
+    caller still gets the full-quality, bit-identical result."""
+    inj = FaultInjector(fail_at={"dispatch": (0, 1)})
+    svc = MappingService(fault_injector=inj,
+                         retry=RetryPolicy(backoff_base_s=0.001))
+    try:
+        r = svc.map(graphs[0], H, CFG)
+        d = shared_map_direct(graphs[0], H, CFG)
+        assert np.array_equal(d.pe_of, r.pe_of) and d.J == r.J
+        assert r.stats["degradation"]["level"] == 0
+        flt = svc.stats()["faults"]
+        assert flt["dispatch_failures"] >= 1
+        assert flt["isolated"] >= 1
+        assert flt["retries"] >= 1
+        assert inj.fired == [("dispatch", 0), ("dispatch", 1)]
+    finally:
+        svc.close()
+
+
+def test_persistent_transient_failure_degrades_to_greedy(graphs):
+    """Retries exhausted on an always-failing dispatch seam: the request
+    degrades to the greedy floor instead of failing (degrade_on_failure)."""
+    inj = FaultInjector(rates={"dispatch": 1.0})
+    svc = MappingService(fault_injector=inj,
+                         retry=RetryPolicy(max_retries=1, backoff_base_s=0.001))
+    try:
+        r = svc.map(graphs[0], H, CFG)
+        deg = r.stats["degradation"]
+        assert deg["level"] == 3 and deg["mode"] == "greedy"
+        expect = greedy_baseline(graphs[0], H, seed=CFG.seed)
+        assert np.array_equal(r.pe_of, expect)
+        assert r.J == evaluate_J(graphs[0], H, expect)
+        flt = svc.stats()["faults"]
+        assert flt["contained"] >= 1 and flt["degraded"] >= 1
+    finally:
+        svc.close()
+
+
+def test_failure_degrades_to_fast_preset_rung(graphs):
+    """An eco request whose full pipeline fails falls to the fast-preset
+    rung — a REAL multisection result, bit-identical to a direct fast run —
+    and the degraded answer is never cached under the original request."""
+    inj = FaultInjector(fail_at={"dispatch": (0, 1)})
+    cfg_eco = SharedMapConfig(preset="eco")
+    svc = MappingService(fault_injector=inj,
+                         retry=RetryPolicy(max_retries=0, backoff_base_s=0.001))
+    try:
+        r = svc.map(graphs[1], H, cfg_eco)
+        deg = r.stats["degradation"]
+        assert deg["level"] == 2 and deg["mode"] == "fast_preset"
+        d_fast = shared_map_direct(graphs[1], H,
+                                   SharedMapConfig(preset="fast"))
+        assert np.array_equal(r.pe_of, d_fast.pe_of)
+        # degraded result was NOT cached: the retry (injector exhausted)
+        # recomputes at full quality
+        again = svc.map(graphs[1], H, cfg_eco)
+        assert again.stats["result_cache"]["hit"] is False
+        assert again.stats["degradation"]["level"] == 0
+        d_eco = shared_map_direct(graphs[1], H, cfg_eco)
+        assert np.array_equal(again.pe_of, d_eco.pe_of)
+    finally:
+        svc.close()
+
+
+def test_nontransient_failure_propagates(graphs):
+    inj = FaultInjector(rates={"dispatch": 1.0}, transient=False)
+    svc = MappingService(fault_injector=inj)
+    try:
+        with pytest.raises(InjectedFault):
+            svc.map(graphs[0], H, SharedMapConfig(preset="fast", seed=11))
+        assert svc._thread.is_alive()  # containment: scheduler survived
+    finally:
+        svc.close()
+
+
+def test_degrade_on_failure_disabled_propagates(graphs):
+    inj = FaultInjector(rates={"dispatch": 1.0})
+    svc = MappingService(fault_injector=inj, degrade_on_failure=False,
+                         retry=RetryPolicy(max_retries=0))
+    try:
+        with pytest.raises(InjectedFault):
+            svc.map(graphs[0], H, SharedMapConfig(preset="fast", seed=12))
+    finally:
+        svc.close()
+
+
+def test_finalize_fault_degrades(graphs):
+    inj = FaultInjector(fail_at={"finalize": (0,)})
+    svc = MappingService(fault_injector=inj)
+    try:
+        r = svc.map(graphs[3], H, CFG)
+        assert r.stats["degradation"]["level"] > 0  # served, degraded
+    finally:
+        svc.close()
+
+
+def test_cache_fault_contained(graphs):
+    """Injected faults at the cache seam degrade to cache misses; the
+    request still resolves at full quality."""
+    inj = FaultInjector(fail_at={"cache": (0, 1)})
+    svc = MappingService(fault_injector=inj)
+    try:
+        r = svc.map(graphs[0], H, CFG)
+        d = shared_map_direct(graphs[0], H, CFG)
+        assert np.array_equal(d.pe_of, r.pe_of)
+        assert r.stats["degradation"]["level"] == 0
+        assert svc.stats()["faults"]["cache_faults"] == 2
+        # the put was skipped -> same request recomputes (then caches)
+        again = svc.map(graphs[0], H, CFG)
+        assert again.stats["result_cache"]["hit"] is False
+        third = svc.map(graphs[0], H, CFG)
+        assert third.stats["result_cache"]["hit"] is True
+    finally:
+        svc.close()
+
+
+# ----------------------------------------------------- overload degradation
+
+
+def test_degrade_on_overload_inline_ladder(graphs):
+    """Under hard overload with degradation enabled, requests are answered
+    inline: cached-nearby when the graph was seen before, greedy otherwise."""
+    svc = MappingService(degrade_on_overload=True)
+    try:
+        primed = svc.map(graphs[0], H, CFG)  # populate the nearby index
+        svc.admission.max_queue = 0  # force hard overload
+        near = svc.map(graphs[0], H, SharedMapConfig(preset="eco", seed=7))
+        assert near.stats["degradation"]["mode"] == "cached_nearby"
+        assert near.stats["degradation"]["level"] == 1
+        assert np.array_equal(near.pe_of, primed.pe_of)
+        cold = svc.map(graphs[1], H, CFG)
+        assert cold.stats["degradation"]["mode"] == "greedy"
+        assert np.array_equal(cold.pe_of,
+                              greedy_baseline(graphs[1], H, seed=CFG.seed))
+        assert svc.stats()["admission"]["degraded"] == 2
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------------ validation boundary
+
+
+def test_validation_rejects_malformed_inputs(graphs):
+    import jax.numpy as jnp
+    g = graphs[0]
+    svc = MappingService()
+    try:
+        with pytest.raises(ValueError, match="empty graph"):
+            svc.submit(g._replace(n=jnp.asarray(0, g.n.dtype)), H, CFG)
+        small = G.gen_rgg(6, seed=1)
+        with pytest.raises(ValueError, match="k=8"):
+            svc.submit(small, H, CFG)  # k > n
+        with pytest.raises(ValueError, match="eps"):
+            svc.submit(g, H, SharedMapConfig(eps=0.0))
+        with pytest.raises(ValueError, match="strategy"):
+            svc.submit(g, H, SharedMapConfig(strategy="quantum"))
+        with pytest.raises(ValueError, match="preset"):
+            svc.submit(g, H, SharedMapConfig(preset="turbo"))
+        bad_cols = np.asarray(g.cols).copy()
+        bad_cols[0] = 10 ** 6
+        with pytest.raises(ValueError, match="out of range"):
+            svc.submit(g._replace(cols=jnp.asarray(bad_cols)), H, CFG)
+    finally:
+        svc.close()
+
+
+def test_validate_request_direct():
+    small = G.gen_rgg(6, seed=1)
+    with pytest.raises(ValueError):
+        validate_request(small, H, CFG)
+    validate_request(G.gen_rgg(64, seed=1), H, CFG)  # clean passes
+
+
+def test_submit_many_mixed_batch_isolated(graphs):
+    """One malformed request in a coalesced batch fails only its own
+    Future; siblings complete bit-identical to the direct path."""
+    svc = MappingService()
+    try:
+        small = G.gen_rgg(6, seed=1)  # k > n: fails validation
+        futs = svc.submit_many([(graphs[0], H, CFG), (small, H, CFG),
+                                (graphs[1], H, CFG)])
+        assert isinstance(futs[1].exception(timeout=600), ValueError)
+        for i, gi in ((0, 0), (2, 1)):
+            d = shared_map_direct(graphs[gi], H, CFG)
+            assert np.array_equal(d.pe_of, futs[i].result(timeout=600).pe_of)
+    finally:
+        svc.close()
+
+
+def test_corrupt_graph_isolated_without_validation(graphs):
+    """With boundary validation off, a corrupt graph fails deep in the
+    pipeline (host-side IndexError during the split) — but only ITS
+    request; coalesced siblings and the scheduler thread survive."""
+    import jax.numpy as jnp
+    bad_cols = np.full(np.asarray(graphs[0].cols).shape, 10 ** 6,
+                       dtype=np.asarray(graphs[0].cols).dtype)
+    corrupt = graphs[0]._replace(cols=jnp.asarray(bad_cols))
+    svc = MappingService(validate=False)
+    try:
+        futs = svc.submit_many([(graphs[2], H, CFG), (corrupt, H, CFG),
+                                (graphs[3], H, CFG)])
+        exc = futs[1].exception(timeout=600)
+        assert exc is not None and not isinstance(exc, ServiceOverloadError)
+        for i, gi in ((0, 2), (2, 3)):
+            d = shared_map_direct(graphs[gi], H, CFG)
+            assert np.array_equal(d.pe_of, futs[i].result(timeout=600).pe_of)
+        assert svc._thread.is_alive()
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------------------------ shutdown
+
+
+def test_close_nowait_fails_pending_futures(graphs):
+    """close(wait=False) must FAIL (not leak) every pending Future, even
+    with a compile-bound request in flight."""
+    import time
+    clear_compile_cache()
+    jax.clear_caches()  # the in-flight dispatch will take seconds
+    svc = MappingService()
+    fut = svc.submit(graphs[1], H, CFG)
+    time.sleep(0.05)  # let the scheduler pick it up
+    t0 = time.time()
+    svc.close(wait=False)
+    assert time.time() - t0 < 5.0  # prompt, not drain
+    assert isinstance(fut.exception(timeout=0.1), ServiceClosedError)
+    with pytest.raises(ServiceClosedError):
+        svc.submit(graphs[0], H, CFG)
+
+
+def test_context_manager_exits_deterministically(graphs):
+    # clean exit drains: the future resolves with its result
+    with MappingService() as svc:
+        fut = svc.submit(graphs[0], H, CFG)
+    assert fut.result(timeout=1) is not None
+
+    # exception exit aborts: pending futures fail promptly
+    class Boom(Exception):
+        pass
+
+    with pytest.raises(Boom):
+        with MappingService() as svc2:
+            with svc2._cv:  # keep it queued so it is provably pending
+                fut2 = svc2.submit(graphs[1], H,
+                                   SharedMapConfig(preset="fast", seed=77))
+                raise Boom()
+    assert isinstance(fut2.exception(timeout=5), ServiceClosedError)
+
+
+# ---------------------------------------------------------------- trackers
+
+
+def test_jsonl_tracker_records_service_history(tmp_path, graphs):
+    path = str(tmp_path / "svc.jsonl")
+    tr = JsonlTracker(path)
+    svc = MappingService(tracker=tr)
+    try:
+        svc.map(graphs[0], H, SharedMapConfig(preset="fast", seed=21))
+        svc.map(graphs[0], H, SharedMapConfig(preset="fast", seed=21))
+    finally:
+        svc.close()
+        tr.close()
+    recs = [json.loads(line) for line in open(path)]
+    names = [r["name"] for r in recs]
+    assert "service.admitted" in names
+    assert "service.cache.hit" in names and "service.cache.miss" in names
+    assert all("t" in r and r["kind"] in ("count", "event") for r in recs)
+    with pytest.raises(ValueError):
+        tr.count("after.close")
+
+
+def test_raising_tracker_never_breaks_serving(graphs):
+    class BadSink(Tracker):
+        def count(self, name, value=1, **tags):
+            raise RuntimeError("sink down")
+
+        def event(self, name, **fields):
+            raise RuntimeError("sink down")
+
+    svc = MappingService(tracker=BadSink(), max_inflight=1, max_queue=1)
+    try:
+        r = svc.map(graphs[0], H, CFG)
+        d = shared_map_direct(graphs[0], H, CFG)
+        assert np.array_equal(d.pe_of, r.pe_of)
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------------------ stress sweep
+
+
+def test_every_future_resolves_under_fault_and_overload(graphs):
+    """Acceptance: injected failures + overload; every accepted Future
+    resolves with a result or a typed error and the scheduler survives."""
+    inj = FaultInjector(seed=3, rates={"dispatch": 0.3})
+    svc = MappingService(max_inflight=2, max_queue=4,
+                         fault_injector=inj,
+                         retry=RetryPolicy(max_retries=1, backoff_base_s=0.001))
+    try:
+        futs = []
+        for wave in range(4):
+            futs += svc.submit_many(
+                [(graphs[i % 4], H,
+                  SharedMapConfig(preset="fast", seed=100 + wave * 5 + i))
+                 for i in range(5)])
+        outcomes = {"ok": 0, "shed": 0}
+        for f in futs:
+            exc = f.exception(timeout=600)
+            if exc is None:
+                r = f.result()
+                assert r.stats["degradation"]["level"] in (0, 1, 2, 3)
+                outcomes["ok"] += 1
+            else:
+                assert isinstance(exc, ServiceOverloadError), exc
+                outcomes["shed"] += 1
+        assert outcomes["ok"] + outcomes["shed"] == 20
+        assert outcomes["ok"] > 0
+        assert svc._thread is None or svc._thread.is_alive()
+    finally:
+        svc.close()

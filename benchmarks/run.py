@@ -16,6 +16,9 @@ section maps to a paper artifact (DESIGN.md §8):
     serve_overload     —        — admission control under an arrival-rate
                                   ramp (p50/p99 latency, shed rate) and a
                                   fault-injection sweep (PR6)
+    device_pipeline    —        — device-resident multisection vs the PR5
+                                  host-mirror loop: per-request wall time
+                                  and host<->device transfer traffic (PR7)
 """
 from __future__ import annotations
 
@@ -490,6 +493,81 @@ def bench_serve_overload(scale: str, quick: bool):
     }
 
 
+def bench_device_pipeline(scale: str, quick: bool):
+    """Device-resident level loop vs the PR5 host-mirror loop (PR7).
+
+    Workload: a burst of rgg64-class graphs on a DEEP hierarchy — many
+    levels of small dispatches, where per-level host round-trips dominate.
+    Three pipelines, bit-identical outputs (tested in tests/):
+
+    * ``host_mirror``     — bucket, resident=False: the PR5 reference;
+                            per-level bulk label fetch + child re-upload.
+    * ``bucket_resident`` — bucket, resident=True (the new default):
+                            children stay on device, [B] metadata per level.
+    * ``device``          — strategy=device: fixed root-shape schedule,
+                            exactly ONE array fetch per request (asserted).
+
+    Per mode we report min-of-reps wall time per request plus the transfer
+    counters (bytes and fetch counts per request) from one instrumented
+    sweep — the protocol cost an accelerator-attached host would pay.
+    """
+    from repro.core import graph as G
+    from repro.core.hierarchy import Hierarchy
+    from repro.core.multisection import (hierarchical_multisection,
+                                         reset_transfer_stats,
+                                         transfer_stats)
+
+    h = Hierarchy(a=(2, 2, 2, 2), d=(1.0, 5.0, 10.0, 100.0))
+    R = 4 if quick else 12
+    n = 64
+    gs = [G.gen_rgg(n, seed=500 + i) for i in range(R)]
+    reps = 2 if quick else 3
+    modes = [
+        ("host_mirror", dict(strategy="bucket", resident=False)),
+        ("bucket_resident", dict(strategy="bucket")),
+        ("device", dict(strategy="device")),
+    ]
+    section = BENCH["sections"].setdefault("device_pipeline", {})
+    base = None
+    for mode, kw in modes:
+        for i, g in enumerate(gs):  # warm every program this mode needs
+            hierarchical_multisection(g, h, preset="fast", seed=i, **kw)
+        reset_transfer_stats()
+        for i, g in enumerate(gs):  # instrumented sweep (warm)
+            res = hierarchical_multisection(g, h, preset="fast", seed=i, **kw)
+        xf = transfer_stats()
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            for i, g in enumerate(gs):
+                hierarchical_multisection(g, h, preset="fast", seed=i, **kw)
+            best = min(best, time.time() - t0)
+        per_req = best / R
+        fetches = xf["d2h_array_fetches"] / R
+        d2h_kb = (xf["d2h_bytes"] + xf["d2h_meta_bytes"]) / R / 1e3
+        h2d_kb = xf["h2d_bytes"] / R / 1e3
+        if mode == "device":
+            assert xf["d2h_array_fetches"] == R, xf  # ONE fetch per request
+        base = base or per_req
+        emit(f"device_pipeline/{mode}/{R}x_rgg{n}", per_req * 1e6,
+             f"speedup_vs_host={base/per_req:.2f} d2h_fetches_per_req="
+             f"{fetches:.1f} d2h_kb_per_req={d2h_kb:.1f}")
+        section[mode] = {
+            "requests": R, "instance": f"rgg{n}",
+            "hierarchy": "x".join(map(str, h.a)),
+            "wall_s_per_request": per_req,
+            "speedup_vs_host_mirror": base / per_req,
+            "J": res.J if hasattr(res, "J") else None,
+            "transfers_per_request": {
+                "d2h_array_fetches": fetches,
+                "d2h_meta_fetches": xf["d2h_meta_fetches"] / R,
+                "d2h_kb": d2h_kb,
+                "h2d_transfers": xf["h2d_transfers"] / R,
+                "h2d_kb": h2d_kb,
+            },
+        }
+
+
 SECTIONS = {
     "quality_profiles": bench_quality_profiles,
     "thread_strategies": bench_thread_strategies,
@@ -500,6 +578,7 @@ SECTIONS = {
     "kernels": bench_kernels,
     "serve": bench_serve,
     "serve_overload": bench_serve_overload,
+    "device_pipeline": bench_device_pipeline,
 }
 
 
@@ -509,7 +588,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=["small", "large", "paper"], default="small")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SECTIONS))
-    ap.add_argument("--out", default="BENCH_PR6.json",
+    ap.add_argument("--out", default="BENCH_PR7.json",
                     help="telemetry JSON path ('' disables)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None

@@ -21,7 +21,10 @@ from .multisection import hierarchical_multisection
 class SharedMapConfig:
     eps: float = 0.03
     preset: str = "eco"          # fast | eco | strong
-    strategy: str = "bucket"     # naive | layer | bucket | queue
+    strategy: str = "bucket"     # naive | layer | bucket | queue | device
+    # ("device" = the fully device-resident level loop: fixed root-shape
+    #  schedule, on-device split/eps/pe accumulation, exactly ONE
+    #  device->host fetch per request; see core/multisection.py.)
     seed: int = 0
     adaptive: bool = True        # Lemma 5.1 adaptive imbalance
     backend: str = "auto"        # refinement kernels: auto | ell | xla
@@ -100,7 +103,7 @@ def finalize_mapping(g: Graph, h: Hierarchy, cfg: SharedMapConfig,
     if cfg.refine_mapping:
         from .mapping import quotient_matrix, swap_refine
         C = quotient_matrix(g, pe_of, h.k)
-        perm = swap_refine(C, h, np.arange(h.k, dtype=np.int64), seed=cfg.seed)
-        pe_of = perm[pe_of]
+        perm = swap_refine(C, h, np.arange(h.k, dtype=np.int32), seed=cfg.seed)
+        pe_of = perm[pe_of].astype(np.int32, copy=False)
         stats["refined"] = True
     return pe_of

@@ -38,6 +38,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels import ops as kops
+
 
 class Graph(NamedTuple):
     """Padded CSR graph (pytree; all fields are arrays for vmap-ability)."""
@@ -60,6 +62,20 @@ class Graph(NamedTuple):
 
     def total_weight(self) -> jax.Array:
         return jnp.sum(self.vwgt)
+
+
+def check_i32_range(n: int, m: int) -> None:
+    """Overflow guard for the int32 index convention.
+
+    The whole pipeline (device CSR, relabel gathers, `pe_of`) indexes with
+    int32; a graph with >= 2^31 vertices or directed edges would silently
+    wrap. Every host-side constructor calls this before allocating.
+    """
+    limit = 2**31
+    if n >= limit or m >= limit:
+        raise ValueError(
+            f"graph exceeds int32 index range: n={n}, m={m} (>= 2^31); "
+            "the int32 CSR convention cannot represent it")
 
 
 def padded_csr_indptr(rows: np.ndarray, m: int, N: int) -> np.ndarray:
@@ -93,6 +109,7 @@ def assemble_padded(
     `pad_graph` and the multisection subgraph extractor.
     """
     m = int(np.asarray(rows).shape[0])
+    check_i32_range(max(n, N), max(m, M))
     if N < n or M < m:
         raise ValueError(f"padding too small: N={N}<{n} or M={M}<{m}")
     r = np.full(M, N - 1, np.int32)
@@ -285,6 +302,111 @@ def pad_graph(g: Graph, N: int, M: int) -> Graph:
         np.asarray(g.ewgt)[:m],
         n, N, M,
     )
+
+
+# ---------------------------------------------------------------------------
+# Device-resident subgraph extraction (the multisection level loop)
+# ---------------------------------------------------------------------------
+
+def repad_device(g: Graph, N2: int, M2: int) -> Graph:
+    """Trace-time re-pad of a Graph to static shapes ``(N2, M2)`` — the
+    on-device analogue of :func:`pad_graph`. Shrinking drops only padding
+    slots (callers guarantee the real counts fit); growing extends with
+    the standard pad convention (rows/cols anchored at ``N2-1``, weight 0,
+    trailing ``indptr`` = m). Works under vmap (all fields sliced/extended
+    along the last axis)."""
+    N, M = g.N, g.M
+
+    def fit(a: jax.Array, L: int, fill) -> jax.Array:
+        if a.shape[-1] >= L:
+            return a[..., :L]
+        pad = jnp.full(a.shape[:-1] + (L - a.shape[-1],), fill, a.dtype)
+        return jnp.concatenate([a, pad], axis=-1)
+
+    ar_m = jnp.arange(M2, dtype=jnp.int32)
+    rows = jnp.where(ar_m < g.m, fit(g.rows, M2, 0), N2 - 1)
+    cols = jnp.where(ar_m < g.m, fit(g.cols, M2, 0), N2 - 1)
+    ewgt = fit(g.ewgt, M2, 0)        # pads are already 0-weight
+    vwgt = fit(g.vwgt, N2, 0)
+    # indptr: entries past the real vertex count all equal m, so slicing is
+    # exact and extension fills with m.
+    ar_n = jnp.arange(N2 + 1, dtype=jnp.int32)
+    indptr = jnp.where(ar_n < N + 1, fit(g.indptr, N2 + 1, 0), g.m)
+    return Graph(vwgt=vwgt, rows=rows, cols=cols, ewgt=ewgt, indptr=indptr,
+                 n=g.n, m=g.m)
+
+
+def take_lanes(g: Graph, sel: jax.Array) -> Graph:
+    """Select lanes of a stacked ``[B, ...]`` Graph: fields indexed along
+    axis 0 by ``sel`` (device-side; used to regroup resident children)."""
+    return jax.tree_util.tree_map(lambda a: jnp.take(a, sel, axis=0), g)
+
+
+def split_blocks(g: Graph, part: jax.Array, orig: jax.Array, k: int,
+                 sentinel: jax.Array) -> tuple[Graph, jax.Array, jax.Array]:
+    """On-device induced-subgraph extraction: the ``k`` block subgraphs of
+    ``g`` under ``part``, as ONE stacked ``[k, N]``/``[k, M]`` Graph.
+
+    The device analogue of the host ``_split`` (core/multisection.py) —
+    stable-sort-by-block + segment offsets + relabel gather, all static
+    shapes so it jits and vmaps over hierarchy-level lanes. Child arrays
+    are produced in the SAME order as the host path (stable sort preserves
+    vertex/edge order within a block, and the parent's sorted-``rows``
+    invariant plus the monotone within-block relabel keeps child rows
+    sorted), so the two paths are bitwise interchangeable.
+
+    ``orig`` is the [N] original-vertex-id view of ``g``'s lanes (padding
+    slots hold ``sentinel``); ``sentinel`` is propagated to child padding
+    so leaf scatters can dump pad writes into a spare ``pe_of`` slot.
+
+    Returns ``(children, child_orig, wsum)``: a stacked Graph whose ``n``/
+    ``m`` fields are ``[k]`` per-child real counts, the ``[k, N]`` original
+    ids, and the ``[k]`` f32 child vertex-weight sums (for the device-side
+    adaptive-imbalance rule).
+    """
+    N, M = g.N, g.M
+    ar_n = jnp.arange(N, dtype=jnp.int32)
+    ar_m = jnp.arange(M, dtype=jnp.int32)
+
+    # --- vertices: stable compaction by block --------------------------------
+    blk = jnp.where(ar_n < g.n, part[:N].astype(jnp.int32), k)
+    counts = jnp.zeros(k + 1, jnp.int32).at[blk].add(1)
+    voff = jnp.cumsum(counts) - counts                       # exclusive prefix
+    order = jnp.argsort(blk, stable=True).astype(jnp.int32)
+    rank = ar_n - voff[blk[order]]
+    relabel = jnp.zeros(N, jnp.int32).at[order].set(rank)    # parent -> child id
+    vsrc = voff[:k, None] + ar_n[None, :]                    # [k, N] source slots
+    v_ok = ar_n[None, :] < counts[:k, None]
+    vids = jnp.take(order, jnp.clip(vsrc, 0, N - 1))
+    cvwgt = jnp.where(v_ok, kops.gather_rows(g.vwgt, vids), 0.0)
+    corig = jnp.where(v_ok, kops.gather_rows(orig, vids), sentinel)
+
+    # --- edges: keep intra-block, relabel endpoints --------------------------
+    emask = ar_m < g.m       # padding anchors (N-1) may alias a real vertex
+    bu = blk[jnp.clip(g.rows, 0, N - 1)]
+    bv = blk[jnp.clip(g.cols, 0, N - 1)]
+    eb = jnp.where(emask & (bu == bv) & (bu < k), bu, k)
+    ecounts = jnp.zeros(k + 1, jnp.int32).at[eb].add(1)
+    eoff = jnp.cumsum(ecounts) - ecounts
+    eorder = jnp.argsort(eb, stable=True).astype(jnp.int32)
+    esrc = eoff[:k, None] + ar_m[None, :]
+    e_ok = ar_m[None, :] < ecounts[:k, None]
+    eids = jnp.take(eorder, jnp.clip(esrc, 0, M - 1))
+    crows = jnp.where(e_ok, kops.gather_rows(relabel[g.rows], eids), N - 1)
+    ccols = jnp.where(e_ok, kops.gather_rows(relabel[g.cols], eids), N - 1)
+    cewgt = jnp.where(e_ok, kops.gather_rows(g.ewgt, eids), 0.0)
+
+    # --- exact per-child CSR prefix (matches padded_csr_indptr) --------------
+    rtar = jnp.where(e_ok, crows, N)  # row N = dropped (see scatter mode)
+    rowcnt = (jnp.zeros((k, N + 1), jnp.int32)
+              .at[jnp.arange(k)[:, None], rtar].add(1, mode="drop")[:, :N])
+    cindptr = jnp.concatenate(
+        [jnp.zeros((k, 1), jnp.int32), jnp.cumsum(rowcnt, axis=1)], axis=1)
+
+    wsum = jax.ops.segment_sum(g.vwgt, blk, num_segments=k + 1)[:k]
+    children = Graph(vwgt=cvwgt, rows=crows, cols=ccols, ewgt=cewgt,
+                     indptr=cindptr, n=counts[:k], m=ecounts[:k])
+    return children, corig, wsum
 
 
 # ---------------------------------------------------------------------------

@@ -121,6 +121,29 @@ def adaptive_epsilon(eps: float, total_weight: float, sub_weight: float,
     return max(ratio ** (1.0 / depth) - 1.0, 0.0)
 
 
+def adaptive_epsilon_jnp(eps: float, total_weight: jax.Array,
+                         sub_weight: jax.Array, k: int, k_sub: int,
+                         depth: int) -> jax.Array:
+    """Device-side Lemma 5.1 over [B] f32 subgraph weights.
+
+    Same formula as :func:`adaptive_epsilon` but evaluated in float32 on
+    device, so the fully device-resident multisection never has to fetch
+    subgraph weights to the host. The device path and its host-reference
+    twin (LevelPlanner ``resident=False`` under the ``device`` strategy)
+    both route through THIS function's jitted program — identical inputs
+    give identical eps bits. For integer vertex weights < 2^24 the inputs
+    themselves are exact, so the two paths agree bitwise end-to-end; for
+    large float weights the f32 sums may differ from the f64 host rule by
+    ulps (documented limitation, DESIGN.md §11).
+    """
+    if depth <= 0:
+        return jnp.full(jnp.shape(sub_weight), eps, jnp.float32)
+    ratio = ((1.0 + eps) * (k_sub * total_weight)
+             / (k * jnp.maximum(sub_weight, 1e-12)))
+    out = jnp.maximum(ratio ** jnp.float32(1.0 / depth) - 1.0, 0.0)
+    return out.astype(jnp.float32)
+
+
 def parse_hierarchy(hs: str, ds: str) -> Hierarchy:
     """Parse 'a1:a2:a3' / 'd1:d2:d3' strings (paper notation)."""
     a = tuple(int(x) for x in hs.split(":"))

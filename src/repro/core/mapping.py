@@ -30,8 +30,10 @@ def evaluate_J(g: Graph, h: Hierarchy, pe_of: np.ndarray,
     Dispatches through ``kernels.ops.mapcost`` — the Pallas edge-tiled
     kernel when live (TPU / forced interpret), the jitted jnp oracle
     otherwise. Padded edge slots carry weight 0, so no mask is needed.
+    ``pe_of`` may be a device array (the device-resident pipeline feeds it
+    without a host round-trip) or any numpy-convertible sequence.
     """
-    pe = jnp.asarray(np.asarray(pe_of), jnp.int32)
+    pe = jnp.asarray(pe_of, jnp.int32)
     if pe.shape[0] > g.N:
         raise ValueError(
             f"pe_of has {pe.shape[0]} entries but the graph holds only "

@@ -15,6 +15,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import threading
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -129,6 +131,41 @@ def partition(
     parts, scores = jax.vmap(run)(salts)
     best = jnp.argmin(scores)
     return parts[best]
+
+
+_BATCHED_CACHE: dict[tuple, Callable] = {}
+_BATCHED_LOCK = threading.Lock()
+
+
+def batched_partition(k: int, levels: int, preset: str, backend: str,
+                      ell_deg: int | None) -> Callable:
+    """Memoized jitted vmapped partition callable ``(gs, eps, salts) ->
+    [B, N] parts`` — the dispatch unit of every bucket/layer/device-level
+    partition call (one executable per static key, shared process-wide
+    across hierarchy levels, strategies and requests).
+
+    Lives here (not in multisection) so every consumer of batched
+    partitions — the level planner, the device-resident loop, external
+    tools — shares one memo. The memoized jitted wrapper hits jit's C++
+    fast path on repeat calls with the same shapes (an AOT
+    ``.lower().compile()`` executable measured SLOWER: its Python
+    ``Compiled.__call__`` costs more than jit dispatch).
+    """
+    key = (k, levels, preset, backend, ell_deg)
+    with _BATCHED_LOCK:
+        fn = _BATCHED_CACHE.get(key)
+        if fn is None:
+            fn = jax.jit(lambda gs, ee, ss: jax.vmap(
+                lambda g1, e1, s1: partition(g1, k, e1, levels, preset, s1,
+                                             backend, ell_deg)
+            )(gs, ee, ss))
+            _BATCHED_CACHE[key] = fn
+    return fn
+
+
+def clear_batched_partition_cache() -> None:
+    with _BATCHED_LOCK:
+        _BATCHED_CACHE.clear()
 
 
 def partition_host(g: Graph, k: int, eps: float, preset: str = "eco", salt: int = 0,

@@ -29,6 +29,7 @@ from . import ref
 from .flashattn import flash_attention_pallas
 from .lp_gain import lp_gain_pallas
 from .mapcost import mapcost_pallas
+from .split import gather_rows_pallas
 
 
 def _on_tpu() -> bool:
@@ -74,6 +75,19 @@ def lp_gain(adj, adw, part, k: int, use_pallas: bool | None = None):
     if use_pallas:
         return lp_gain_pallas(adj, adw, part, k, interpret=interpret)
     return ref.lp_gain_ref(adj, adw, part, k)
+
+
+def gather_rows(src, idx, use_pallas: bool | None = None):
+    """Masked-compaction gather for the split op: out[b,j] = src[idx[b,j]].
+
+    ``idx`` is clipped in-range inside both implementations; pure data
+    movement, so pallas/interpret/xla agree BITWISE (the device-resident
+    multisection's determinism depends on this; tested in test_kernels).
+    """
+    use_pallas, interpret = dispatch(use_pallas)
+    if use_pallas:
+        return gather_rows_pallas(src, idx, interpret=interpret)
+    return ref.gather_rows_ref(src, idx)
 
 
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,

@@ -44,6 +44,16 @@ def lp_gain_ref(
     return conn, best, gain
 
 
+def gather_rows_ref(src: jax.Array, idx: jax.Array) -> jax.Array:
+    """[k, L] gather of a 1-D source: out[b, j] = src[idx[b, j]].
+
+    ``idx`` must be in-range (callers clip); exact for every dtype — the
+    device-resident split op relies on bitwise parity between this oracle
+    and the Pallas kernel (no float math anywhere).
+    """
+    return jnp.take(src, jnp.clip(idx, 0, src.shape[0] - 1))
+
+
 def csr_to_ell(rows, cols, ewgt, N: int, DEG: int):
     """Convert directed CSR edge arrays to padded ELL [N, DEG] (jnp).
 

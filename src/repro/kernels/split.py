@@ -1,0 +1,53 @@
+"""Pallas gather kernel backing the device-resident induced-subgraph split.
+
+The split op (core/graph.py:split_blocks) is a stable-sort-by-block
+compaction: after host-free bookkeeping (segment offsets, relabel) every
+child array is produced by one *masked row gather* from a flat source
+vector — ``out[b, j] = src[idx[b, j]]`` with the mask applied outside.
+That gather is the only memory-bound inner loop, so it is the piece worth
+a kernel: ``src`` stays VMEM-resident across the row grid while the
+``[1, TILE_L]`` index tiles stream from HBM (same shape discipline as
+``lp_gain``'s neighbour gather).
+
+Pure data movement — no float arithmetic — so the compiled kernel, the
+interpreter, and the jnp oracle (kernels/ref.py:gather_rows_ref) are
+bitwise identical; backend choice can never perturb a mapping.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_L = 512  # index-tile width (lane-dim aligned; see lp_gain.TILE_V)
+
+
+def _gather_rows_kernel(src_ref, idx_ref, out_ref):
+    src = src_ref[...]
+    idx = idx_ref[...]
+    out_ref[...] = jnp.take(src, jnp.clip(idx, 0, src.shape[0] - 1))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_rows_pallas(src: jax.Array, idx: jax.Array,
+                       interpret: bool = True) -> jax.Array:
+    """out[b, j] = src[clip(idx[b, j])] for 1-D ``src`` and [k, L] ``idx``."""
+    K, L = idx.shape
+    S = src.shape[0]
+    Lp = ((L + TILE_L - 1) // TILE_L) * TILE_L
+    if Lp != L:
+        idx = jnp.pad(idx, ((0, 0), (0, Lp - L)))
+    out = pl.pallas_call(
+        _gather_rows_kernel,
+        grid=(K, Lp // TILE_L),
+        in_specs=[
+            pl.BlockSpec((S,), lambda i, j: (0,)),        # src resident
+            pl.BlockSpec((1, TILE_L), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, TILE_L), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((K, Lp), src.dtype),
+        interpret=interpret,
+    )(src, idx)
+    return out[:, :L]

@@ -92,7 +92,7 @@ from repro.serve.admission import (ADMIT, ADMIT_DEGRADED, PREEMPT, SHED,
                                    ServiceOverloadError)
 from repro.serve.tracker import NULL_TRACKER, Tracker, safe_emit
 
-_PLANNABLE = ("bucket", "layer")
+_PLANNABLE = ("bucket", "layer", "device")
 _PRESETS = ("fast", "eco", "strong")
 
 # degradation ladder levels (stats["degradation"]["level"])
@@ -666,8 +666,7 @@ class MappingService:
                 req.planner = LevelPlanner(
                     req.g, req.h, eps=req.cfg.eps, preset=req.cfg.preset,
                     seed=req.cfg.seed, adaptive=req.cfg.adaptive,
-                    backend=req.cfg.backend,
-                    bucketed=(req.cfg.strategy == "bucket"),
+                    backend=req.cfg.backend, strategy=req.cfg.strategy,
                     checkpoint=lambda req=req: self._planner_checkpoint(req))
             except BaseException as exc:
                 self._fail(req, exc)

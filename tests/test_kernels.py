@@ -172,6 +172,65 @@ def test_ops_lp_gain_dispatch():
     assert np.array_equal(np.asarray(b1), np.asarray(b2))
 
 
+# --- PR7: gather_rows (device-resident split's data-movement kernel) ----------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+@pytest.mark.parametrize("shape", [(1, 64), (3, 257), (4, 1024), (2, 4096)])
+def test_gather_rows_parity(dtype, shape):
+    """gather_rows_pallas (interpret) == jnp oracle, bitwise — it is pure
+    data movement, so parity must be exact for float AND integer payloads
+    (split_blocks gathers weights, ids and relabeled endpoints through it)."""
+    from repro.kernels.split import gather_rows_pallas
+
+    K, L = shape
+    rng = np.random.default_rng(K * L)
+    S = 500
+    if dtype == jnp.float32:
+        src = jnp.asarray(rng.random(S), jnp.float32)
+    else:
+        src = jnp.asarray(rng.integers(-100, 100, S), jnp.int32)
+    idx = jnp.asarray(rng.integers(0, S + 40, (K, L)), jnp.int32)  # some OOB
+    a = ref.gather_rows_ref(src, idx)
+    b = gather_rows_pallas(src, idx, interpret=True)
+    assert a.dtype == b.dtype == dtype
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_ops_gather_rows_dispatch():
+    """ops.gather_rows returns identical values through either backend."""
+    rng = np.random.default_rng(9)
+    src = jnp.asarray(rng.random(300), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 300, (2, 128)), jnp.int32)
+    a = ops.gather_rows(src, idx, use_pallas=False)
+    b = ops.gather_rows(src, idx, use_pallas=True)
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_split_blocks_backend_invariant(monkeypatch):
+    """The on-device split must produce identical children whatever kernel
+    backend serves its gathers — it is pure data movement end to end."""
+    from repro.core import multisection as M
+    from repro.core.graph import split_blocks
+
+    g = G.gen_rgg(200, seed=17)
+    rng = np.random.default_rng(1)
+    k = 2
+    part = jnp.asarray(
+        np.where(np.arange(g.N) < int(g.n),
+                 rng.integers(0, k, g.N), k).astype(np.int32))
+    orig = jnp.asarray(
+        np.where(np.arange(g.N) < int(g.n),
+                 np.arange(g.N), int(g.n)).astype(np.int32))
+    outs = {}
+    for be in ("xla", "interpret"):
+        monkeypatch.setenv("REPRO_KERNEL_BACKEND", be)
+        ch, co, ws = split_blocks(g, part, orig, k, jnp.int32(int(g.n)))
+        outs[be] = jax.tree_util.tree_map(np.asarray, (ch, co, ws))
+    for a, b in zip(jax.tree_util.tree_leaves(outs["xla"]),
+                    jax.tree_util.tree_leaves(outs["interpret"])):
+        assert np.array_equal(a, b)
+
+
 def test_kernel_backend_env(monkeypatch):
     monkeypatch.setenv("REPRO_KERNEL_BACKEND", "interpret")
     assert ops.kernel_backend() == "interpret"

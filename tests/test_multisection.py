@@ -216,6 +216,157 @@ def test_level_planner_matches_run_loop(g):
     assert direct.stats["padded_vertex_work"] == res.stats["padded_vertex_work"]
 
 
+# --- PR7: device-resident multisection ---------------------------------------
+
+H_SMALL = Hierarchy(a=(2, 2), d=(1.0, 10.0))
+
+
+@pytest.fixture(scope="module")
+def g_small():
+    return G.gen_rgg(300, seed=13)
+
+
+def test_split_blocks_matches_host_split():
+    """graph.split_blocks (the on-device induced-subgraph op) must be
+    BITWISE identical to the host `_split` extraction — every child array
+    including padding slots, sizes and weights."""
+    import jax.numpy as jnp
+    from repro.core.multisection import _split, host_graph_from
+
+    g0 = G.gen_rgg(400, seed=21)
+    hg = host_graph_from(g0)
+    rng = np.random.default_rng(0)
+    k = 3
+    part = rng.integers(0, k, hg.n).astype(np.int32)
+    hg.depth = 2
+    host_children = _split(hg, part, k, 1, 1, k)
+
+    N, M = g0.N, g0.M
+    pb = np.full(N, k, np.int32)
+    pb[: hg.n] = part
+    orig = jnp.asarray(
+        np.concatenate([np.arange(hg.n), np.full(N - hg.n, hg.n)]).astype(np.int32))
+    ch, corig, wsum = G.split_blocks(g0, jnp.asarray(pb), orig, k,
+                                     jnp.int32(hg.n))
+    for b, hc in enumerate(host_children):
+        dev = hc.to_device(N, M)  # children keep the parent's padded shapes
+        assert int(ch.n[b]) == hc.n and int(ch.m[b]) == hc.m
+        assert np.array_equal(np.asarray(ch.vwgt[b]), np.asarray(dev.vwgt))
+        assert np.array_equal(np.asarray(ch.rows[b]), np.asarray(dev.rows))
+        assert np.array_equal(np.asarray(ch.cols[b]), np.asarray(dev.cols))
+        assert np.array_equal(np.asarray(ch.ewgt[b]), np.asarray(dev.ewgt))
+        assert np.array_equal(np.asarray(ch.indptr[b]), np.asarray(dev.indptr))
+        co = np.asarray(corig[b])
+        assert np.array_equal(co[: hc.n], hc.orig_ids)
+        assert (co[hc.n:] == hg.n).all()  # pads hit the sentinel
+        assert np.float32(wsum[b]) == np.float32(hc.vwgt.sum())
+
+
+@pytest.mark.parametrize("preset", ["fast", "eco", "strong"])
+def test_device_equals_host_reference_presets(g_small, preset):
+    """The fully device-resident level loop must be bit-identical to its
+    host-reference twin (resident=False under the same strategy) — the
+    regression contract for the on-device split/eps/scatter pipeline."""
+    a = hierarchical_multisection(g_small, H_SMALL, eps=0.03, preset=preset,
+                                  strategy="device", seed=3)
+    b = hierarchical_multisection(g_small, H_SMALL, eps=0.03, preset=preset,
+                                  strategy="device", seed=3, resident=False)
+    assert np.array_equal(a.pe_of, b.pe_of)
+    assert a.stats["partition_calls"] == b.stats["partition_calls"]
+
+
+@pytest.mark.parametrize("backend", ["auto", "ell", "xla"])
+def test_device_equals_host_reference_backends(g_small, backend):
+    a = hierarchical_multisection(g_small, H_SMALL, eps=0.03, preset="fast",
+                                  strategy="device", seed=5, backend=backend)
+    b = hierarchical_multisection(g_small, H_SMALL, eps=0.03, preset="fast",
+                                  strategy="device", seed=5, backend=backend,
+                                  resident=False)
+    assert np.array_equal(a.pe_of, b.pe_of)
+
+
+def test_bucket_resident_equals_host_mirror(g):
+    """bucket with the device-resident level loop (the default) must equal
+    the PR-5 host-mirror loop (resident=False) bit-for-bit — and therefore
+    naive too (test_bucket_equals_naive_bitwise closes that triangle)."""
+    a = hierarchical_multisection(g, H_PAPER, eps=0.03, preset="fast",
+                                  strategy="bucket", seed=2)
+    b = hierarchical_multisection(g, H_PAPER, eps=0.03, preset="fast",
+                                  strategy="bucket", seed=2, resident=False)
+    assert np.array_equal(a.pe_of, b.pe_of)
+    assert a.stats["partition_calls"] == b.stats["partition_calls"]
+    assert a.stats["resident"] and not b.stats["resident"]
+
+
+def test_device_strategy_single_array_fetch(g_small):
+    """The device strategy's acceptance contract: exactly ONE device->host
+    array fetch per request (the final pe_of) — no bulk label or mirror
+    traffic, no per-level metadata fetches either."""
+    from repro.core.multisection import (reset_transfer_stats,
+                                         transfer_stats)
+
+    # warm: compiles + memoized program construction must not pollute the
+    # measured counters
+    hierarchical_multisection(g_small, H_SMALL, preset="fast",
+                              strategy="device", seed=1)
+    reset_transfer_stats()
+    res = hierarchical_multisection(g_small, H_SMALL, preset="fast",
+                                    strategy="device", seed=1)
+    xf = transfer_stats()
+    assert xf["d2h_array_fetches"] == 1, xf
+    assert xf["d2h_bytes"] == res.pe_of.nbytes, xf
+    # the root metadata read (n, m ints) is the only per-request meta cost
+    assert xf["d2h_meta_fetches"] <= 1, xf
+
+
+def test_bucket_resident_meta_only_transfers(g_small):
+    """bucket-resident moves METADATA per level (child sizes/weights), one
+    bulk fetch total; the PR-5 host mirror fetched full arrays per level."""
+    from repro.core.multisection import (reset_transfer_stats,
+                                         transfer_stats)
+
+    hierarchical_multisection(g_small, H_SMALL, preset="fast",
+                              strategy="bucket", seed=1)
+    reset_transfer_stats()
+    hierarchical_multisection(g_small, H_SMALL, preset="fast",
+                              strategy="bucket", seed=1)
+    res_xf = transfer_stats()
+    reset_transfer_stats()
+    hierarchical_multisection(g_small, H_SMALL, preset="fast",
+                              strategy="bucket", seed=1, resident=False)
+    host_xf = transfer_stats()
+    assert res_xf["d2h_array_fetches"] == 1, res_xf
+    assert host_xf["d2h_array_fetches"] > res_xf["d2h_array_fetches"]
+    assert host_xf["d2h_bytes"] > res_xf["d2h_bytes"]
+
+
+def test_i32_overflow_guard():
+    """Graphs at/above 2^31 vertices or edge slots must be rejected before
+    any int32 index array silently wraps."""
+    from repro.core.graph import check_i32_range
+
+    check_i32_range(2**31 - 1, 2**31 - 1)  # max representable: fine
+    with pytest.raises(ValueError, match="int32"):
+        check_i32_range(2**31, 8)
+    with pytest.raises(ValueError, match="int32"):
+        check_i32_range(8, 2**31)
+
+
+def test_host_graph_dtypes_and_result_dtype(g_small):
+    """The unified store is f32/i32 end-to-end: no silent f64/i64 upcasts
+    in the host view, and pe_of comes back int32 from every strategy."""
+    from repro.core.multisection import host_graph_from
+
+    hg = host_graph_from(g_small)
+    assert hg.vwgt.dtype == np.float32 and hg.ewgt.dtype == np.float32
+    assert hg.rows.dtype == np.int32 and hg.cols.dtype == np.int32
+    assert hg.orig_ids.dtype == np.int32
+    for strategy in ("naive", "bucket", "device"):
+        res = hierarchical_multisection(g_small, H_SMALL, preset="fast",
+                                        strategy=strategy, seed=1)
+        assert res.pe_of.dtype == np.int32, strategy
+
+
 def test_merged_dispatch_lane_independent(g):
     """execute_group_batch over same-key groups of DIFFERENT hierarchies
     returns bit-identical per-member results vs solo dispatches — the

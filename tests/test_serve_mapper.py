@@ -144,6 +144,58 @@ def test_warmup_precompiles(svc):
     assert stats == {"hits": 1, "misses": 0}
 
 
+# --- PR7: device-resident strategy through the service ------------------------
+
+def test_device_strategy_via_service(graphs, svc):
+    """The device strategy is plannable: served requests must be
+    bit-identical to the direct path, like bucket/layer."""
+    cfg = SharedMapConfig(preset="fast", strategy="device")
+    d = shared_map_direct(graphs[0], H, cfg)
+    r = svc.map(graphs[0], H, cfg)
+    assert np.array_equal(d.pe_of, r.pe_of)
+    assert d.J == r.J
+    again = svc.map(graphs[0], H, cfg)
+    assert again.stats["result_cache"]["hit"] is True
+
+
+def test_device_requests_coalesce(graphs):
+    """Same-shape device-strategy requests share exec keys level by level,
+    so a concurrent burst merges into shared dispatches — and merging must
+    not change any request's labels."""
+    cfgs = [SharedMapConfig(preset="fast", strategy="device", seed=s)
+            for s in (1, 2, 3)]  # same graph: identical root (N0, M0) keys
+    direct = [shared_map_direct(graphs[0], H, c) for c in cfgs]
+    svc = MappingService(cache_entries=0)
+    try:
+        futs = svc.submit_many([(graphs[0], H, c) for c in cfgs])
+        res = [f.result(timeout=600) for f in futs]
+        co = svc.stats()["coalesce"]
+    finally:
+        svc.close()
+    for d, r in zip(direct, res):
+        assert np.array_equal(d.pe_of, r.pe_of)
+    assert co["groups"] > co["dispatches"], co
+
+
+def test_device_single_fetch_through_service(graphs):
+    """The single-device-fetch contract survives the service plumbing: one
+    array fetch for the multisection labels per request (evaluate_J of the
+    final result is a separate, documented scalar read)."""
+    from repro.core.multisection import (reset_transfer_stats,
+                                         transfer_stats)
+
+    cfg = SharedMapConfig(preset="fast", strategy="device")
+    svc = MappingService(cache_entries=0)
+    try:
+        svc.map(graphs[1], H, cfg)  # warm compiles
+        reset_transfer_stats()
+        svc.map(graphs[1], H, cfg)
+        xf = transfer_stats()
+    finally:
+        svc.close()
+    assert xf["d2h_array_fetches"] == 1, xf
+
+
 def test_submit_after_close_raises():
     svc = MappingService()
     svc.close()

@@ -19,6 +19,10 @@ section maps to a paper artifact (DESIGN.md §8):
     device_pipeline    —        — device-resident multisection vs the PR5
                                   host-mirror loop: per-request wall time
                                   and host<->device transfer traffic (PR7)
+    durability         —        — persistent result store: warm-restart
+                                  hit latency vs cold compute vs in-memory
+                                  LRU hit, and the persistence-tier write
+                                  overhead on the compute path (PR8)
 """
 from __future__ import annotations
 
@@ -568,6 +572,126 @@ def bench_device_pipeline(scale: str, quick: bool):
         }
 
 
+def bench_durability(scale: str, quick: bool):
+    """Persistence tier of the mapping service (PR8).
+
+    Three latencies for the SAME request: cold compute (empty caches),
+    in-memory LRU repeat, and a store hit after a "process restart" (a
+    fresh service opened on the same store directory — LRU cold, disk
+    warm). Plus the write overhead the durable tier adds to the compute
+    path: a burst of distinct requests with and without a store attached.
+    The store hit pays decode + checksum but skips partitioning entirely,
+    so it should land between the LRU hit and cold compute — orders of
+    magnitude below the latter.
+    """
+    import shutil
+    import tempfile
+
+    from repro.core import graph as G
+    from repro.core.api import SharedMapConfig
+    from repro.core.hierarchy import Hierarchy
+    from repro.serve.mapper import MappingService
+
+    h = Hierarchy(a=(2, 2, 2), d=(1.0, 10.0, 100.0))
+    n = 64
+    R = 4 if quick else 12
+    gs = [G.gen_rgg(n, seed=200 + i) for i in range(R)]
+    cfg = SharedMapConfig(preset="fast")
+    section = BENCH["sections"].setdefault("durability", {})
+    root = tempfile.mkdtemp(prefix="bench_durability_")
+    try:
+        path = f"{root}/store"
+        svc = MappingService(store_path=path, batch_window_s=0.0)
+        try:
+            t0 = time.time()
+            cold = svc.map(gs[0], h, cfg)
+            cold_s = time.time() - t0
+            assert cold.stats["result_cache"]["hit"] is False
+            emit(f"durability/cold_compute/rgg{n}", cold_s * 1e6, "")
+
+            hit_reps = 20
+            t0 = time.time()
+            for _ in range(hit_reps):
+                res = svc.map(gs[0], h, cfg)
+            lru_s = (time.time() - t0) / hit_reps
+            assert res.stats["result_cache"]["hit"] is True
+            emit(f"durability/lru_hit/rgg{n}", lru_s * 1e6,
+                 f"speedup_vs_cold={cold_s/lru_s:.0f}x")
+        finally:
+            svc.close()
+
+        # "restarted process": fresh service, same directory. First map()
+        # must come from disk, not recompute — assert via store telemetry.
+        svc2 = MappingService(store_path=path, batch_window_s=0.0)
+        try:
+            reps = 5
+            warm_s = float("inf")
+            for i in range(reps):
+                t0 = time.time()
+                res = svc2.map(gs[0], h, cfg)
+                warm_s = min(warm_s, time.time() - t0)
+                if i == 0:
+                    assert svc2.stats()["store"]["hits"] == 1
+                    first_restart_s = time.time() - t0
+                # evict so every rep re-reads the disk tier, not the LRU
+                svc2._cache.clear()
+                svc2._by_graph.clear()
+            assert res.stats["result_cache"]["hit"] is True
+            emit(f"durability/store_hit_after_restart/rgg{n}", warm_s * 1e6,
+                 f"speedup_vs_cold={cold_s/warm_s:.0f}x")
+        finally:
+            svc2.close()
+
+        # persistence overhead on the compute path: distinct requests so
+        # every one computes AND (with a store) encodes + fsync-renames.
+        # Every rgg graph has its own padded M, hence its own jitted
+        # programs — warm ALL of them first (result cache off, so the
+        # timed bursts below still compute) or the first burst eats the
+        # compiles and the comparison measures compilation, not writes.
+        warm = MappingService(batch_window_s=0.0, cache_entries=0)
+        try:
+            for g in gs:
+                warm.map(g, h, cfg)
+        finally:
+            warm.close()
+
+        def _burst(store_path):
+            kw = {"store_path": store_path} if store_path else {}
+            s = MappingService(batch_window_s=0.0, **kw)
+            try:
+                t0 = time.time()
+                for g in gs:
+                    s.map(g, h, cfg)
+                wall = time.time() - t0
+                writes = s.stats()["store"]["writes"] if store_path else 0
+            finally:
+                s.close()
+            return wall, writes
+
+        nostore_s, _ = _burst(None)
+        store_s, writes = _burst(f"{root}/store2")
+        assert writes == R
+        over = (store_s - nostore_s) / R
+        emit(f"durability/persist_overhead/{R}x_rgg{n}", store_s * 1e6,
+             f"per_write_overhead_us={over*1e6:.0f}")
+
+        section.update({
+            "instance": f"rgg{n}",
+            "hierarchy": "x".join(map(str, h.a)),
+            "cold_compute_s": cold_s,
+            "lru_hit_s": lru_s,
+            "store_hit_s": warm_s,
+            "store_hit_first_restart_s": first_restart_s,
+            "store_hit_speedup_vs_cold": cold_s / warm_s,
+            "burst_requests": R,
+            "burst_no_store_s": nostore_s,
+            "burst_with_store_s": store_s,
+            "per_write_overhead_s": over,
+        })
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 SECTIONS = {
     "quality_profiles": bench_quality_profiles,
     "thread_strategies": bench_thread_strategies,
@@ -579,6 +703,7 @@ SECTIONS = {
     "serve": bench_serve,
     "serve_overload": bench_serve_overload,
     "device_pipeline": bench_device_pipeline,
+    "durability": bench_durability,
 }
 
 
@@ -588,7 +713,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=["small", "large", "paper"], default="small")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SECTIONS))
-    ap.add_argument("--out", default="BENCH_PR7.json",
+    ap.add_argument("--out", default="BENCH_PR8.json",
                     help="telemetry JSON path ('' disables)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None

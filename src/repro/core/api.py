@@ -79,17 +79,23 @@ def shared_map(g: Graph, h: Hierarchy, config: SharedMapConfig | None = None) ->
 
 
 def shared_map_direct(g: Graph, h: Hierarchy, cfg: SharedMapConfig,
-                      checkpoint=None) -> SharedMapResult:
+                      checkpoint=None, resident=None) -> SharedMapResult:
     """The in-process path (no service indirection); also the fallback the
     service itself uses for the non-plannable strategies (naive/queue).
 
     ``checkpoint`` (optional zero-arg callable) is invoked between
     multisection levels; raising inside it aborts the run — the service
-    uses it to enforce deadlines and shutdown on fallback requests."""
+    uses it to enforce deadlines and shutdown on fallback requests.
+
+    ``resident`` overrides the planner strategies' device residency
+    (None = strategy default): the service's shadow verifier passes
+    ``resident=False`` to run a request on the bitwise host-ref twin of
+    the device pipeline, and its worker processes forward the session's
+    device-quarantine decision the same way."""
     res = hierarchical_multisection(
         g, h, eps=cfg.eps, preset=cfg.preset, strategy=cfg.strategy,
         seed=cfg.seed, adaptive=cfg.adaptive, backend=cfg.backend,
-        checkpoint=checkpoint,
+        checkpoint=checkpoint, resident=resident,
     )
     res.pe_of = finalize_mapping(g, h, cfg, res.pe_of, res.stats)
     return SharedMapResult(pe_of=res.pe_of, J=evaluate_J(g, h, res.pe_of), stats=res.stats)

@@ -971,6 +971,13 @@ def hierarchical_multisection(
         return planner.result()
     if strategy not in ("naive", "queue"):
         raise ValueError(f"unknown strategy {strategy!r}")
+    if resident is not None:
+        # naive/queue run entirely on the host path; silently ignoring a
+        # residency request would let e.g. a shadow-verification caller
+        # believe it exercised the device pipeline when it never existed.
+        raise ValueError(f"resident= applies only to the planner strategies "
+                         f"{_PLANNER_STRATEGIES}; strategy {strategy!r} has "
+                         f"no device-resident variant")
 
     root = host_graph_from(g)
     root.depth = h.l

@@ -8,6 +8,13 @@ are deterministic. This module generalizes both:
 * A fault **site** is a string naming an injection seam ("dispatch",
   "cache", "finalize", "train_step", ...). Call :meth:`FaultInjector.check`
   at the seam; it raises :class:`InjectedFault` when the plan says so.
+  PR 8's durability layer adds two seams with non-raise semantics at the
+  consumer: ``"worker_kill"`` (serve/supervisor — a fired occurrence
+  SIGKILLs the worker a task was just dispatched to, driving the
+  crash-detect/restart/re-dispatch machinery deterministically) and
+  ``"store_write"`` (serve/store — a fired occurrence publishes a
+  deliberately TRUNCATED entry, a simulated torn write that the
+  checksum-verified load must detect and quarantine).
 * Two matching modes per site, usable together:
 
   - ``fail_at={"site": (i, j, ...)}`` — fail specific *occurrences*.

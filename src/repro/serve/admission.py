@@ -27,8 +27,7 @@ own scheduler lock, so there is no second lock order to reason about.
 from __future__ import annotations
 
 import dataclasses
-
-from repro.faults import InjectedFault
+import time
 
 
 class ServiceOverloadError(RuntimeError):
@@ -155,16 +154,29 @@ class RetryPolicy:
     backoff_base_s: float = 0.02
     backoff_factor: float = 2.0
 
-    def backoff_s(self, attempt: int) -> float:
-        """Sleep before retry ``attempt`` (0-based)."""
-        return self.backoff_base_s * (self.backoff_factor ** attempt)
+    def backoff_s(self, attempt: int, deadline: float | None = None) -> float:
+        """Sleep before retry ``attempt`` (0-based).
+
+        ``deadline`` (absolute ``time.monotonic()``) caps the sleep at the
+        request's remaining budget: an exponential backoff must never be
+        the thing that pushes a request past its deadline — the caller
+        re-checks the deadline after the (possibly zero-length) sleep and
+        fails with ``DeadlineExceededError`` instead of retrying late.
+        """
+        backoff = self.backoff_base_s * (self.backoff_factor ** attempt)
+        if deadline is not None:
+            backoff = min(backoff, max(deadline - time.monotonic(), 0.0))
+        return backoff
 
     def is_transient(self, exc: BaseException) -> bool:
-        """Retry-worthy? Injected faults say so themselves; real-world
-        compile/OOM-style errors are matched by message (XLA surfaces
-        RESOURCE_EXHAUSTED through generic RuntimeErrors)."""
-        if isinstance(exc, InjectedFault):
-            return exc.transient
+        """Retry-worthy? Exceptions that know (``InjectedFault``, the
+        supervisor's ``WorkerCrashError``) carry a ``transient`` attribute
+        and say so themselves; real-world compile/OOM-style errors are
+        matched by message (XLA surfaces RESOURCE_EXHAUSTED through
+        generic RuntimeErrors)."""
+        transient = getattr(exc, "transient", None)
+        if transient is not None:
+            return bool(transient)
         if isinstance(exc, MemoryError):
             return True
         msg = str(exc).upper()

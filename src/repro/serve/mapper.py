@@ -44,6 +44,32 @@ adversarial load — mapping sits in the launch critical path:
   ``repro.faults.FaultInjector`` exercises the dispatch/cache/finalize
   seams deterministically (shared with the trainer).
 
+And a durability + supervision layer (PR 8, DESIGN.md §12) that makes the
+service restartable, multi-process, and self-checking:
+
+* **Durable result store** — ``store_path=`` plugs a crash-safe
+  content-addressed :class:`~repro.serve.store.ResultStore` in as the
+  persistence tier behind the LRU: every full-quality result is atomically
+  published to disk, and a restarted service warm-starts — an LRU miss
+  falls through to the store and serves the bit-identical result the same
+  request would recompute. Corrupt/truncated entries are checksum-detected,
+  quarantined (``stats["store"]["corrupt"]``), and never returned.
+* **Supervised workers** — ``workers=N`` executes requests in
+  ``serve/supervisor.py`` worker PROCESSES (spawned, heartbeat-monitored):
+  a worker crash — segfault, OOM kill, SIGKILL — is detected, the worker
+  restarts with capped exponential backoff, and its in-flight request is
+  re-dispatched so the Future still resolves. A repeatedly-crashing
+  request fails with a typed transient ``WorkerCrashError`` and falls into
+  the normal degradation ladder. (Process isolation supersedes
+  cross-request coalescing: worker mode trades merged dispatches for
+  crash containment.)
+* **Shadow verification** — ``shadow_verify_fraction=p`` re-executes that
+  fraction of ``strategy="device"`` results against the bitwise host-ref
+  twin (``resident=False``); a divergence is recorded to the tracker,
+  the lying entry is evicted + quarantined, and the device pipeline is
+  quarantined for the rest of the session (subsequent device requests run
+  the host-ref path). ``stats["shadow"]`` carries the sample counters.
+
 Usage::
 
     svc = MappingService(tracker=JsonlTracker("mapper.jsonl"))
@@ -52,6 +78,8 @@ Usage::
     fut = svc.submit(g, h, cfg, priority=1, deadline_s=0.5)
     res = await svc.amap(g, h)
     svc.close()
+
+    svc = MappingService(store_path="/var/cache/mapper", workers=2)
 
 The non-plannable strategies (``naive``/``queue``) fall back to the direct
 path on a small worker pool — still cached and admission-controlled,
@@ -85,11 +113,13 @@ from repro.core.multisection import (STRATEGIES, LevelPlanner, PlanGroup,
                                      host_graph_from)
 from repro.core.partition import num_levels
 from repro.core.refine import resolve_backend
-from repro.faults import NULL_INJECTOR, FaultInjector
+from repro.faults import NULL_INJECTOR, FaultInjector, _hash_uniform
 from repro.serve.admission import (ADMIT, ADMIT_DEGRADED, PREEMPT, SHED,
                                    AdmissionController, DeadlineExceededError,
                                    RetryPolicy, ServiceClosedError,
                                    ServiceOverloadError)
+from repro.serve.store import ResultStore
+from repro.serve.supervisor import SupervisedWorkerPool
 from repro.serve.tracker import NULL_TRACKER, Tracker, safe_emit
 
 _PLANNABLE = ("bucket", "layer", "device")
@@ -236,9 +266,29 @@ class MappingService:
     tracker: metrics sink (``serve/tracker.py``); sink errors never
         propagate into the serving path.
     fault_injector: seeded ``repro.faults.FaultInjector`` exercised at the
-        dispatch/cache/finalize seams (tests/benchmarks).
+        dispatch/cache/finalize seams (tests/benchmarks) and forwarded to
+        the store (``store_write``) and supervisor (``worker_kill``) seams.
     validate: check requests at the boundary (``validate_request``) and
         raise ``ValueError`` synchronously from :meth:`submit`.
+    store_path: directory for the crash-safe persistent result store
+        (``serve/store.py``); None disables persistence. An LRU miss falls
+        through to the store, so a restarted service with the same path
+        warm-starts its cache bit-identically.
+    store: an already-constructed :class:`ResultStore` (overrides
+        ``store_path``; lets tests share one store between services).
+    workers: > 0 executes requests in that many SUPERVISED WORKER
+        PROCESSES (``serve/supervisor.py``) instead of in-process: crashes
+        (incl. SIGKILL) are detected, workers restart with capped backoff,
+        in-flight requests are re-dispatched. Trades cross-request
+        coalescing for crash isolation. 0 (default) keeps PR 5's
+        in-process execution.
+    worker_kwargs: extra keyword arguments for
+        :class:`SupervisedWorkerPool` (heartbeat_s, hang_timeout_s, ...).
+    shadow_verify_fraction: fraction (0..1) of ``strategy="device"``
+        results re-executed against the bitwise host-ref twin
+        (``resident=False``). The first divergence quarantines the device
+        strategy for the session (host path from then on), evicts the
+        lying cache/store entry, and re-caches the trusted host result.
     """
 
     def __init__(self, cache_entries: int = 256, batch_window_s: float = 0.002,
@@ -250,7 +300,12 @@ class MappingService:
                  retry: RetryPolicy | None = None,
                  tracker: Tracker = NULL_TRACKER,
                  fault_injector: FaultInjector = NULL_INJECTOR,
-                 validate: bool = True):
+                 validate: bool = True,
+                 store_path: str | None = None,
+                 store: ResultStore | None = None,
+                 workers: int = 0,
+                 worker_kwargs: dict | None = None,
+                 shadow_verify_fraction: float = 0.0):
         self.cache_entries = int(cache_entries)
         self.batch_window_s = float(batch_window_s)
         self.merge_across_requests = bool(merge_across_requests)
@@ -261,6 +316,17 @@ class MappingService:
         self.retry = retry or RetryPolicy()
         self.tracker = tracker
         self.faults = fault_injector
+        self.store = store
+        if self.store is None and store_path is not None:
+            self.store = ResultStore(store_path, fault_injector=fault_injector)
+        self.supervisor: SupervisedWorkerPool | None = None
+        if int(workers) > 0:
+            self.supervisor = SupervisedWorkerPool(
+                int(workers), fault_injector=fault_injector, tracker=tracker,
+                **(worker_kwargs or {}))
+        self.shadow_verify_fraction = float(shadow_verify_fraction)
+        self._shadow_seq = 0
+        self._device_quarantined = False
         self.admission = AdmissionController(max_inflight=max_inflight,
                                              max_queue=max_queue,
                                              degrade_at=degrade_at)
@@ -287,6 +353,7 @@ class MappingService:
             "warmup": {"programs": 0, "seconds": 0.0},
             "faults": {"dispatch_failures": 0, "retries": 0, "isolated": 0,
                        "contained": 0, "cache_faults": 0, "degraded": 0},
+            "shadow": {"sampled": 0, "matched": 0, "mismatched": 0},
         }
         _LIVE_SERVICES.add(self)
 
@@ -537,6 +604,11 @@ class MappingService:
                 "MappingService closed before the request completed"))
         if self._thread is not None:
             self._thread.join(None if wait else 2.0)
+        if self.supervisor is not None:
+            # drain (or abort) the worker processes BEFORE the fallback
+            # pool: worker done-callbacks may still submit finalize/shadow
+            # jobs onto it.
+            self.supervisor.close(wait=wait)
         self._fallback.shutdown(wait=wait, cancel_futures=not wait)
         self.uninstall()
         _LIVE_SERVICES.discard(self)
@@ -570,8 +642,13 @@ class MappingService:
                     for k, v in self.telemetry.items()}
             snap["result_cache"]["entries"] = len(self._cache)
             snap["result_cache"]["capacity"] = self.cache_entries
+            snap["shadow"]["device_quarantined"] = self._device_quarantined
         with self._cv:
             snap["admission"] = self.admission.snapshot()
+        if self.store is not None:
+            snap["store"] = self.store.stats()
+        if self.supervisor is not None:
+            snap["workers"] = self.supervisor.stats()
         return snap
 
     # ------------------------------------------------------------ scheduler
@@ -661,12 +738,18 @@ class MappingService:
             raise DeadlineExceededError("deadline exceeded mid-pipeline")
 
     def _admit(self, req: _Request, active: list[_Request]) -> None:
+        if self.supervisor is not None:
+            # worker mode: the whole request executes in a supervised
+            # process — crash isolation supersedes coalescing.
+            self._submit_to_worker(req)
+            return
         if req.cfg.strategy in _PLANNABLE:
             try:
                 req.planner = LevelPlanner(
                     req.g, req.h, eps=req.cfg.eps, preset=req.cfg.preset,
                     seed=req.cfg.seed, adaptive=req.cfg.adaptive,
                     backend=req.cfg.backend, strategy=req.cfg.strategy,
+                    resident=self._resident_override(req.cfg),
                     checkpoint=lambda req=req: self._planner_checkpoint(req))
             except BaseException as exc:
                 self._fail(req, exc)
@@ -674,6 +757,13 @@ class MappingService:
             active.append(req)
         else:
             self._fallback.submit(self._run_fallback, req)
+
+    def _resident_override(self, cfg: SharedMapConfig) -> bool | None:
+        """None = the strategy's default; False = host-ref twin, forced
+        once the shadow verifier has quarantined the device pipeline."""
+        if cfg.strategy == "device" and self._device_quarantined:
+            return False
+        return None
 
     def _step(self, active: list[_Request]) -> None:
         """One coalesced execution round over all active planners.
@@ -777,15 +867,23 @@ class MappingService:
         out: dict[tuple[int, int], object] = {}
         for (req, gi, gr) in entries:
             try:
-                out[(id(req), gi)] = self._execute_with_retry(gr)
+                out[(id(req), gi)] = self._execute_with_retry(
+                    gr, deadline=req.deadline)
             except BaseException as exc:
                 out[(id(req), gi)] = exc
         return out
 
-    def _execute_with_retry(self, gr: PlanGroup) -> np.ndarray:
+    def _execute_with_retry(self, gr: PlanGroup,
+                            deadline: float | None = None) -> np.ndarray:
         """One group's dispatch with the retry policy: transient failures
         back off exponentially up to ``retry.max_retries``; deterministic
-        failures raise immediately (retrying them cannot help)."""
+        failures raise immediately (retrying them cannot help).
+
+        Each backoff sleep is capped at the request's remaining deadline
+        budget and the deadline is re-checked before re-dispatching, so a
+        retrying request can never resolve LATE — it fails with
+        ``DeadlineExceededError`` the moment the budget runs out.
+        """
         attempt = 0
         while True:
             try:
@@ -796,12 +894,15 @@ class MappingService:
                 if not self.retry.is_transient(exc) \
                         or attempt >= self.retry.max_retries:
                     raise
-                backoff = self.retry.backoff_s(attempt)
+                backoff = self.retry.backoff_s(attempt, deadline=deadline)
                 self._count_fault("retries")
                 safe_emit(self.tracker.count, "service.retry")
                 safe_emit(self.tracker.event, "retry", attempt=attempt,
                           backoff_s=backoff, error=repr(exc))
                 time.sleep(backoff)
+                if deadline is not None and time.monotonic() > deadline:
+                    raise DeadlineExceededError(
+                        "deadline exceeded during retry backoff") from exc
                 attempt += 1
 
     # ------------------------------------------------- fallback / finalize
@@ -826,7 +927,11 @@ class MappingService:
                         and attempt < self.retry.max_retries:
                     self._count_fault("retries")
                     safe_emit(self.tracker.count, "service.retry")
-                    time.sleep(self.retry.backoff_s(attempt))
+                    # capped at the deadline budget; the loop's checkpoint
+                    # turns an exhausted budget into DeadlineExceededError
+                    # before any re-dispatch.
+                    time.sleep(self.retry.backoff_s(attempt,
+                                                    deadline=req.deadline))
                     attempt += 1
                     continue
                 self._contain(req, exc)
@@ -846,6 +951,119 @@ class MappingService:
                               J=evaluate_J(req.g, req.h, pe_of),
                               stats=ms_result.stats)
         self._resolve(req, res)
+        self._maybe_shadow(req, res)
+
+    # ------------------------------------------------- supervised workers
+
+    def _submit_to_worker(self, req: _Request) -> None:
+        """Ship one request to the supervised worker pool as plain arrays
+        (real CSR slices — padding is rebuilt worker-side). The deadline
+        crosses the process boundary as a REMAINING duration: monotonic
+        instants are not comparable between processes."""
+        n, m = int(req.g.n), int(req.g.m)
+        timeout_s = None
+        if req.deadline is not None:
+            timeout_s = max(req.deadline - time.monotonic(), 0.0)
+        payload = {
+            "vwgt": np.asarray(req.g.vwgt)[:n],
+            "rows": np.asarray(req.g.rows)[:m],
+            "cols": np.asarray(req.g.cols)[:m],
+            "ewgt": np.asarray(req.g.ewgt)[:m],
+            "n": n, "N": int(req.g.N), "M": int(req.g.M),
+            "a": tuple(req.h.a), "d": tuple(req.h.d),
+            "cfg": dataclasses.asdict(req.cfg),
+            "timeout_s": timeout_s,
+            "resident": self._resident_override(req.cfg),
+        }
+        try:
+            fut = self.supervisor.submit(
+                "repro.serve.supervisor:mapping_task", payload)
+        except BaseException as exc:
+            self._fail(req, exc)
+            return
+        fut.add_done_callback(
+            lambda f, req=req: self._worker_done(req, f))
+
+    def _worker_done(self, req: _Request, fut: Future) -> None:
+        """Worker completion (runs on the supervisor's collector thread).
+        Crash errors are transient (``WorkerCrashError.transient``) and
+        fall into the normal containment/degradation ladder."""
+        try:
+            out = fut.result()
+        except BaseException as exc:
+            self._contain(req, exc)
+            return
+        try:
+            if req.deadline is not None and time.monotonic() > req.deadline:
+                self._deadline_miss(req)
+                return
+            res = SharedMapResult(pe_of=np.asarray(out["pe_of"]),
+                                  J=float(out["J"]),
+                                  stats=dict(out["stats"]))
+            self._resolve(req, res)
+            self._maybe_shadow(req, res)
+        except BaseException as exc:
+            self._fail(req, exc)
+
+    # ---------------------------------------------------- shadow verification
+
+    def _maybe_shadow(self, req: _Request, res: SharedMapResult) -> None:
+        """Deterministically sample device-strategy results for re-execution
+        against the bitwise host-ref twin (``resident=False``)."""
+        if (self.shadow_verify_fraction <= 0.0
+                or req.cfg.strategy != "device"
+                or self._device_quarantined
+                or req.degradation is not None):
+            return
+        with self._lock:
+            self._shadow_seq += 1
+            draw = _hash_uniform(getattr(self.faults, "seed", 0) or 0,
+                                 "shadow", self._shadow_seq - 1)
+        if draw >= self.shadow_verify_fraction:
+            return
+        try:
+            self._fallback.submit(self._shadow_verify, req, res)
+        except RuntimeError:
+            # pool already shutting down (close raced the sampling): verify
+            # inline so a sampled result is never silently dropped.
+            self._shadow_verify(req, res)
+
+    def _shadow_verify(self, req: _Request, res: SharedMapResult) -> None:
+        """Re-execute on the host-ref twin and compare bitwise. Runs on the
+        fallback pool AFTER the caller's Future resolved — verification
+        costs latency only for the sampled fraction's *successors* (the
+        quarantine decision), never for the sampled request itself."""
+        with self._lock:
+            self.telemetry["shadow"]["sampled"] += 1
+        try:
+            ref = capi.shared_map_direct(req.g, req.h, req.cfg,
+                                         resident=False)
+        except BaseException as exc:  # the twin failing is not a divergence
+            safe_emit(self.tracker.event, "shadow_error", error=repr(exc))
+            return
+        if np.array_equal(np.asarray(res.pe_of), np.asarray(ref.pe_of)):
+            with self._lock:
+                self.telemetry["shadow"]["matched"] += 1
+            safe_emit(self.tracker.count, "service.shadow.match")
+            return
+        self._shadow_mismatch(req, ref)
+
+    def _shadow_mismatch(self, req: _Request, ref: SharedMapResult) -> None:
+        """First divergence: quarantine the device strategy for the session,
+        evict + quarantine the lying entry, re-cache the trusted host
+        result under the same fingerprint."""
+        with self._lock:
+            self.telemetry["shadow"]["mismatched"] += 1
+            self._device_quarantined = True
+            self._cache.pop(req.fp, None)
+            if self._by_graph.get(req.gfp) == req.fp:
+                self._by_graph.pop(req.gfp, None)
+        safe_emit(self.tracker.count, "service.shadow.mismatch")
+        safe_emit(self.tracker.event, "shadow_mismatch", fp=req.fp.hex(),
+                  strategy_quarantined="device")
+        if self.store is not None:
+            self.store.quarantine(req.fp, reason="shadow_mismatch")
+        self._cache_put(req.fp, req.gfp, ref)
 
     # -------------------------------------------- containment / degradation
 
@@ -977,7 +1195,7 @@ class MappingService:
     # ---------------------------------------------------------- result cache
 
     def _cache_get(self, fp: bytes) -> SharedMapResult | None:
-        if self.cache_entries <= 0:
+        if self.cache_entries <= 0 and self.store is None:
             return None
         try:
             self.faults.check("cache")
@@ -990,17 +1208,40 @@ class MappingService:
                 self._cache.move_to_end(fp)
                 self.telemetry["requests"] += 1
                 self.telemetry["result_cache"]["hits"] += 1
+        if res is None and self.store is not None:
+            # LRU miss: fall through to the persistence tier. The store
+            # verifies the checksum — a corrupt entry is quarantined store-
+            # side and surfaces here as a plain miss, never as a result.
+            loaded = self.store.get(fp)
+            if loaded is not None:
+                res, gfp = loaded
+                self._cache_insert(fp, gfp, res)
+                with self._lock:
+                    self.telemetry["requests"] += 1
+                    self.telemetry["result_cache"]["hits"] += 1
+                safe_emit(self.tracker.count, "service.store.hit")
         if res is not None:
             safe_emit(self.tracker.count, "service.cache.hit")
         return res
 
     def _cache_put(self, fp: bytes, gfp: bytes, res: SharedMapResult) -> None:
-        if self.cache_entries <= 0:
+        if self.cache_entries <= 0 and self.store is None:
             return
         try:
             self.faults.check("cache")
         except BaseException:  # contained: the request still resolves
             self._count_fault("cache_faults")
+            return
+        self._cache_insert(fp, gfp, res)
+        if self.store is not None:
+            # persistence is a tier, not a requirement: put() swallows I/O
+            # errors (counted in stats["store"]["write_errors"]).
+            self.store.put(fp, gfp, res)
+
+    def _cache_insert(self, fp: bytes, gfp: bytes,
+                      res: SharedMapResult) -> None:
+        """LRU insert only (no persistence side effects)."""
+        if self.cache_entries <= 0:
             return
         with self._lock:
             self._cache[fp] = res

@@ -20,10 +20,12 @@ but scoped to what the serving path needs today.
 """
 from __future__ import annotations
 
+import atexit
 import json
 import logging
 import threading
 import time
+import weakref
 from typing import IO
 
 
@@ -90,14 +92,44 @@ class LogTracker(Tracker):
         self.logger.log(self.level, "event %s %s", name, fields)
 
 
+# JsonlTrackers alive at interpreter exit get a final flush. Registration
+# order matters: this module is imported by serve/mapper.py BEFORE mapper
+# registers its own atexit teardown, and atexit runs LIFO — so the
+# service's teardown (which may emit final shed/deadline/fault events into
+# a tracker) runs FIRST, and this flush runs after it, capturing those
+# last events. A crash-killed process can still lose at most the current
+# partially-buffered line, because writes are line-buffered.
+_LIVE_JSONL: "weakref.WeakSet[JsonlTracker]" = weakref.WeakSet()
+
+
+@atexit.register
+def _flush_live_trackers() -> None:
+    for t in list(_LIVE_JSONL):
+        try:
+            t.flush()
+        except Exception:
+            pass
+
+
 class JsonlTracker(Tracker):
     """Appends one JSON object per emit to a file: a process-independent
-    record of the service's admission/shed/retry/cache history."""
+    record of the service's admission/shed/retry/cache history.
+
+    Crash-safe by construction: the file is opened LINE-BUFFERED, every
+    emit is a single ``write()`` of one whole line, and a process-exit
+    hook (ordered after the mapping service's own teardown — see
+    ``_LIVE_JSONL``) flushes whatever the final teardown emitted. An
+    abrupt kill can therefore truncate at most the very last line, and a
+    truncated trailing line is trivially detectable by any JSONL reader.
+    """
 
     def __init__(self, path: str):
         self.path = path
         self._lock = threading.Lock()
-        self._f: IO[str] | None = open(path, "a")
+        # buffering=1: line-buffered text mode — each full line written in
+        # one call reaches the OS at the newline, not at interpreter exit.
+        self._f: IO[str] | None = open(path, "a", buffering=1)
+        _LIVE_JSONL.add(self)
 
     def _write(self, obj: dict) -> None:
         line = json.dumps(obj, default=str)
@@ -124,6 +156,7 @@ class JsonlTracker(Tracker):
                 self._f.flush()
                 self._f.close()
                 self._f = None
+        _LIVE_JSONL.discard(self)
 
 
 class CompositeTracker(Tracker):

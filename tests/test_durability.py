@@ -1,0 +1,230 @@
+"""Service-level durability: warm-restart from the persistent store,
+on-disk corruption containment, supervised worker-mode integration, and
+shadow verification of the device pipeline (DESIGN.md §12)."""
+import os
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import api as capi
+from repro.core.api import SharedMapConfig, shared_map_direct
+from repro.core.graph import from_edges
+from repro.core.hierarchy import Hierarchy
+from repro.faults import FaultInjector
+from repro.serve.mapper import MappingService, request_fingerprint
+from repro.serve.tracker import InMemoryTracker
+
+H = Hierarchy(a=(2, 2), d=(1.0, 10.0))
+CFG = SharedMapConfig(preset="fast")
+
+
+def _ring(n=48, seed=0):
+    u = np.arange(n - 1)
+    return from_edges(n, u, u + 1)
+
+
+def _svc(**kw):
+    kw.setdefault("batch_window_s", 0.0)
+    return MappingService(**kw)
+
+
+# ---------------------------------------------------------------- store tier
+
+
+def test_warm_restart_reloads_bit_identical(tmp_path):
+    g = _ring()
+    path = str(tmp_path / "store")
+    svc = _svc(store_path=path)
+    cold = svc.submit(g, H, CFG).result(timeout=120)
+    svc.close()
+
+    svc2 = _svc(store_path=path)  # a "restarted process"
+    warm = svc2.submit(g, H, CFG).result(timeout=120)
+    s = svc2.stats()
+    svc2.close()
+    assert np.array_equal(cold.pe_of, warm.pe_of)
+    assert warm.pe_of.dtype == cold.pe_of.dtype
+    assert cold.J == warm.J
+    assert warm.stats["result_cache"]["hit"] is True
+    assert s["store"]["hits"] == 1
+    assert s["store"]["entries_on_open"] >= 1
+
+
+def test_store_shared_between_live_services(tmp_path):
+    """Two services over one directory: what one computes, the other
+    serves from the persistence tier (the multi-process cache-sharing
+    story, minus the processes)."""
+    g = _ring(seed=1)
+    path = str(tmp_path / "store")
+    with _svc(store_path=path) as a, _svc(store_path=path) as b:
+        ra = a.submit(g, H, CFG).result(timeout=120)
+        rb = b.submit(g, H, CFG).result(timeout=120)
+        assert np.array_equal(ra.pe_of, rb.pe_of)
+        assert b.stats()["store"]["hits"] == 1
+
+
+def test_corrupt_store_entry_recomputed_service_stays_up(tmp_path):
+    g = _ring()
+    path = str(tmp_path / "store")
+    svc = _svc(store_path=path)
+    first = svc.submit(g, H, CFG).result(timeout=120)
+    svc.close()
+
+    fp = request_fingerprint(g, H, CFG)
+    entry = os.path.join(path, fp.hex() + ".res")
+    blob = bytearray(open(entry, "rb").read())
+    blob[len(blob) // 2] ^= 0x01  # single bit flip
+    with open(entry, "wb") as f:
+        f.write(bytes(blob))
+
+    svc2 = _svc(store_path=path)
+    res = svc2.submit(g, H, CFG).result(timeout=120)  # recomputed, not served
+    s = svc2.stats()
+    # the service survives AND the recompute matches the original
+    again = svc2.submit(_ring(seed=2), H, CFG).result(timeout=120)
+    svc2.close()
+    assert np.array_equal(res.pe_of, first.pe_of)
+    assert s["store"]["corrupt"] == 1
+    assert s["store"]["quarantined"] == 1
+    assert res.stats["result_cache"]["hit"] is False
+    assert again.pe_of.shape[0] >= 1
+
+
+def test_torn_write_injection_roundtrip(tmp_path):
+    """A torn (injected) store write is detected on the NEXT service's
+    load and degrades to recompute — never a wrong answer."""
+    g = _ring()
+    path = str(tmp_path / "store")
+    inj = FaultInjector(fail_at={"store_write": (0,)})
+    svc = _svc(store_path=path, fault_injector=inj)
+    first = svc.submit(g, H, CFG).result(timeout=120)
+    svc.close()
+    assert ("store_write", 0) in inj.fired
+
+    svc2 = _svc(store_path=path)
+    res = svc2.submit(g, H, CFG).result(timeout=120)
+    s = svc2.stats()
+    svc2.close()
+    assert np.array_equal(res.pe_of, first.pe_of)
+    assert s["store"]["corrupt"] == 1
+    assert res.stats["result_cache"]["hit"] is False
+
+
+def test_degraded_results_not_persisted(tmp_path):
+    """The degradation ladder must never poison the durable tier."""
+    g = _ring()
+    path = str(tmp_path / "store")
+    inj = FaultInjector(fail_at={"dispatch": tuple(range(8))})
+    svc = _svc(store_path=path, fault_injector=inj,
+               retry=None, degrade_on_failure=True)
+    res = svc.submit(g, H, CFG).result(timeout=120)
+    s = svc.stats()
+    svc.close()
+    assert res.stats["degradation"]["level"] > 0
+    assert s["store"]["writes"] == 0
+    assert s["store"]["entries"] == 0
+
+
+# ----------------------------------------------------- supervised worker mode
+
+
+@pytest.mark.slow
+def test_worker_mode_clean_and_sigkill_recovery(tmp_path):
+    """One combined integration test (worker spawn is expensive):
+    (1) a clean worker-mode request is bit-identical to the direct path;
+    (2) a SIGKILLed worker mid-request is restarted and the request
+        re-dispatched — the future STILL resolves, bit-identically."""
+    g = _ring()
+    ref = shared_map_direct(g, H, CFG)
+    inj = FaultInjector(fail_at={"worker_kill": (1,)})
+    tr = InMemoryTracker()
+    svc = _svc(workers=1, fault_injector=inj, tracker=tr,
+               store_path=str(tmp_path / "store"),
+               worker_kwargs={"restart_backoff_s": 0.01})
+    try:
+        clean = svc.submit(g, H, CFG).result(timeout=300)
+        assert np.array_equal(clean.pe_of, ref.pe_of)
+        assert clean.J == ref.J
+
+        # occurrence 1 of worker_kill fires on the next dispatch: the
+        # worker is SIGKILLed with the request in flight.
+        cfg2 = SharedMapConfig(preset="fast", seed=7)
+        ref2 = shared_map_direct(g, H, cfg2)
+        killed = svc.submit(g, H, cfg2).result(timeout=300)
+        assert np.array_equal(killed.pe_of, ref2.pe_of)
+        s = svc.stats()
+        assert s["workers"]["killed_injected"] == 1
+        assert s["workers"]["crashes"] >= 1
+        assert s["workers"]["restarts"] >= 1
+        assert s["workers"]["redispatched"] >= 1
+        assert s["store"]["writes"] == 2  # both results persisted
+        assert any(e["name"] == "worker_crash" for e in tr.events)
+    finally:
+        svc.close()
+
+
+# ------------------------------------------------------- shadow verification
+
+
+def test_shadow_match_keeps_device_live():
+    g = _ring()
+    dcfg = SharedMapConfig(preset="fast", strategy="device")
+    svc = _svc(shadow_verify_fraction=1.0)
+    res = svc.submit(g, H, dcfg).result(timeout=300)
+    svc.close(wait=True)  # drains the fallback pool -> shadow job done
+    s = svc.stats()
+    assert res.stats.get("resident") is not False
+    assert s["shadow"]["sampled"] == 1
+    assert s["shadow"]["matched"] == 1
+    assert s["shadow"]["mismatched"] == 0
+    assert s["shadow"]["device_quarantined"] is False
+
+
+def test_shadow_mismatch_quarantines_device(tmp_path, monkeypatch):
+    """Force a divergence by making the host-ref twin disagree: the
+    service must record the mismatch, evict + quarantine the entry, and
+    route every later device request to the host path."""
+    g = _ring()
+    dcfg = SharedMapConfig(preset="fast", strategy="device")
+    tr = InMemoryTracker()
+    svc = _svc(shadow_verify_fraction=1.0, tracker=tr,
+               store_path=str(tmp_path / "store"))
+    orig = capi.shared_map_direct
+
+    def lying(g_, h_, cfg_, checkpoint=None, resident=None):
+        res = orig(g_, h_, cfg_, checkpoint=checkpoint, resident=resident)
+        if resident is False:  # only the shadow twin lies
+            res.pe_of = (res.pe_of + 1) % int(h_.k)
+        return res
+
+    monkeypatch.setattr(capi, "shared_map_direct", lying)
+    try:
+        svc.submit(g, H, dcfg).result(timeout=300)
+        deadline = time.monotonic() + 60
+        while time.monotonic() < deadline:
+            if svc.stats()["shadow"]["mismatched"]:
+                break
+            time.sleep(0.05)
+        s = svc.stats()
+        assert s["shadow"]["mismatched"] == 1
+        assert s["shadow"]["device_quarantined"] is True
+        assert s["store"]["quarantined"] == 1  # the lying entry is evicted
+        assert any(e["name"] == "shadow_mismatch" for e in tr.events)
+        # later device requests run the host-ref twin
+        monkeypatch.setattr(capi, "shared_map_direct", orig)
+        later = svc.submit(g, H, SharedMapConfig(
+            preset="fast", strategy="device", seed=3)).result(timeout=300)
+        assert later.stats.get("resident") is False
+        # and no further shadow sampling happens while quarantined
+        assert svc.stats()["shadow"]["sampled"] == 1
+    finally:
+        svc.close()
+
+
+def test_shadow_fraction_zero_never_samples():
+    g = _ring()
+    dcfg = SharedMapConfig(preset="fast", strategy="device")
+    with _svc() as svc:
+        svc.submit(g, H, dcfg).result(timeout=300)
+    assert svc.stats()["shadow"]["sampled"] == 0

@@ -4,6 +4,7 @@ Shares graph shapes with test_serve_mapper.py so full-suite runs reuse the
 same compiled executables.
 """
 import json
+import time
 
 import jax
 import numpy as np
@@ -411,12 +412,14 @@ def test_submit_many_mixed_batch_isolated(graphs):
 
 def test_corrupt_graph_isolated_without_validation(graphs):
     """With boundary validation off, a corrupt graph fails deep in the
-    pipeline (host-side IndexError during the split) — but only ITS
-    request; coalesced siblings and the scheduler thread survive."""
+    pipeline — but only ITS request; coalesced siblings and the scheduler
+    thread survive. The corruption is a truncated adjacency (wrong-shaped
+    cols): shape mismatches throw on every backend, unlike out-of-range
+    indices, which device gathers clamp silently since the split moved
+    on-device (that case is what validate=True rejects at the boundary)."""
     import jax.numpy as jnp
-    bad_cols = np.full(np.asarray(graphs[0].cols).shape, 10 ** 6,
-                       dtype=np.asarray(graphs[0].cols).dtype)
-    corrupt = graphs[0]._replace(cols=jnp.asarray(bad_cols))
+    corrupt = graphs[0]._replace(
+        cols=jnp.asarray(np.asarray(graphs[0].cols)[:3]))
     svc = MappingService(validate=False)
     try:
         futs = svc.submit_many([(graphs[2], H, CFG), (corrupt, H, CFG),
@@ -541,3 +544,116 @@ def test_every_future_resolves_under_fault_and_overload(graphs):
         assert svc._thread is None or svc._thread.is_alive()
     finally:
         svc.close()
+
+
+# ------------------------------------------- PR 8 satellites: retry deadlines
+
+
+def test_retry_backoff_never_overruns_deadline(graphs):
+    """Regression: RetryPolicy backoff sleeps used to run their full
+    exponential length regardless of the request deadline, so a retrying
+    request could resolve LATE. Now each sleep is capped at the remaining
+    budget and the deadline is re-checked before any re-dispatch: under a
+    tight deadline the outcome is DeadlineExceededError, never a late
+    success."""
+    inj = FaultInjector(fail_at={"dispatch": tuple(range(50))})
+    svc = MappingService(
+        fault_injector=inj, degrade_on_failure=False,
+        retry=RetryPolicy(max_retries=5, backoff_base_s=0.5))
+    try:
+        t0 = time.monotonic()
+        fut = svc.submit(graphs[0], H, CFG, deadline_s=0.2)
+        exc = fut.exception(timeout=120)
+        elapsed = time.monotonic() - t0
+        assert isinstance(exc, DeadlineExceededError), exc
+        # without the cap, 5 retries sleep 0.5+1+2+4+8 = 15.5s; with it the
+        # request dies within its ~0.2s budget (generous slack for jit).
+        assert elapsed < 5.0, f"late failure after {elapsed:.2f}s"
+    finally:
+        svc.close()
+
+
+def test_retry_policy_backoff_capped_by_deadline():
+    pol = RetryPolicy(max_retries=3, backoff_base_s=10.0)
+    assert pol.backoff_s(0) == 10.0                       # uncapped
+    near = time.monotonic() + 0.05
+    assert pol.backoff_s(0, deadline=near) <= 0.05        # capped at budget
+    assert pol.backoff_s(0, deadline=time.monotonic() - 1) == 0.0  # expired
+
+
+def test_retry_policy_transient_attribute_generic():
+    """Any exception carrying ``transient`` classifies itself — the seam
+    the supervisor's WorkerCrashError rides through without imports."""
+    pol = RetryPolicy()
+
+    class Crash(RuntimeError):
+        transient = True
+
+    class Fatal(RuntimeError):
+        transient = False
+
+    assert pol.is_transient(Crash("worker died"))
+    assert not pol.is_transient(Fatal("bad graph"))
+    assert pol.is_transient(InjectedFault("x", transient=True))
+    assert not pol.is_transient(InjectedFault("x", transient=False))
+    assert not pol.is_transient(ValueError("deterministic"))
+
+
+# --------------------------------------- PR 8 satellites: crash-safe tracker
+
+
+def test_jsonl_tracker_line_buffered_writes(tmp_path):
+    """Events must reach the OS at each newline — NOT at close — so a
+    crash-killed process loses at most the final partial line."""
+    path = str(tmp_path / "events.jsonl")
+    tr = JsonlTracker(path)
+    tr.event("shed", reason="queue_full")
+    tr.count("service.retry")
+    # read back through a SEPARATE handle without flushing or closing
+    lines = open(path).read().splitlines()
+    assert len(lines) == 2
+    assert json.loads(lines[0])["name"] == "shed"
+    assert json.loads(lines[1])["name"] == "service.retry"
+    tr.close()
+
+
+def test_jsonl_tracker_atexit_ordering():
+    """The tracker module's atexit flush must be registered BEFORE the
+    mapper module's teardown hook (atexit is LIFO: registered-first runs
+    LAST), so final events emitted during service teardown get flushed."""
+    from repro.serve import mapper as mapper_mod
+    from repro.serve import tracker as tracker_mod
+
+    # the ordering is a consequence of mapper importing tracker before
+    # registering its own hook (module singletons make that stable).
+    assert hasattr(tracker_mod, "_flush_live_trackers")
+    assert hasattr(mapper_mod, "_close_live_services")
+    # functional check: a service left open at interpreter exit, with an
+    # unflushed tracker, still lands its events on disk.
+    import subprocess
+    import sys
+    code = (
+        "import sys; sys.path.insert(0, 'src')\n"
+        "from repro.serve.tracker import JsonlTracker\n"
+        "from repro.serve.mapper import MappingService\n"
+        "tr = JsonlTracker(sys.argv[1])\n"
+        "svc = MappingService(tracker=tr)\n"
+        "tr.event('sentinel', n=1)\n"
+        "# neither close() nor flush(): atexit must do both, in order\n"
+    )
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/exit.jsonl"
+        subprocess.run([sys.executable, "-c", code, path], check=True,
+                       cwd="/root/repo", timeout=300)
+        lines = [json.loads(x) for x in open(path).read().splitlines()]
+    assert any(e.get("name") == "sentinel" for e in lines)
+
+
+def test_jsonl_tracker_closed_twice_is_safe(tmp_path):
+    tr = JsonlTracker(str(tmp_path / "e.jsonl"))
+    tr.count("x")
+    tr.close()
+    tr.close()
+    with pytest.raises(ValueError):
+        tr.count("y")

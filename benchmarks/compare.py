@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Diff two BENCH_*.json telemetry files and gate on cold-path regressions.
+
+Walks both files' ``sections`` trees, pairs up every numeric leaf present in
+both, and prints the relative delta. Leaves whose dotted path contains
+``cold`` are the regression gate: if NEW is slower than OLD by more than
+``--threshold`` (default 20%) on any cold-path leaf, the exit code is 1 —
+wire this into CI after a bench run to catch compile-path regressions.
+
+Usage:
+    python benchmarks/compare.py BENCH_OLD.json BENCH_NEW.json [--threshold 0.2]
+
+Non-cold leaves are informational only (warm timings are min-of-reps and
+noisy on shared runners; cold timings are single-shot but dominated by
+compile time, which is what the fused v-cycle work targets).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def numeric_leaves(node, prefix=""):
+    """Yield (dotted_path, value) for every numeric scalar in a JSON tree."""
+    if isinstance(node, bool):
+        return
+    if isinstance(node, (int, float)):
+        yield prefix, float(node)
+    elif isinstance(node, dict):
+        for k, v in node.items():
+            yield from numeric_leaves(v, f"{prefix}.{k}" if prefix else str(k))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from numeric_leaves(v, f"{prefix}[{i}]")
+
+
+def is_cold_path(path: str) -> bool:
+    return "cold" in path.lower()
+
+
+def compare(old: dict, new: dict, threshold: float):
+    """Return (rows, regressions): rows are (path, old, new, rel_delta, cold)."""
+    old_leaves = dict(numeric_leaves(old.get("sections", old)))
+    new_leaves = dict(numeric_leaves(new.get("sections", new)))
+    rows, regressions = [], []
+    for path in sorted(old_leaves.keys() & new_leaves.keys()):
+        ov, nv = old_leaves[path], new_leaves[path]
+        if ov == 0.0:
+            continue  # no meaningful relative delta
+        delta = (nv - ov) / abs(ov)
+        cold = is_cold_path(path)
+        rows.append((path, ov, nv, delta, cold))
+        if cold and delta > threshold:
+            regressions.append((path, ov, nv, delta))
+    return rows, regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.2,
+                    help="max tolerated relative slowdown on cold-path leaves "
+                         "(default 0.2 = 20%%)")
+    ap.add_argument("--all", action="store_true",
+                    help="print every paired leaf, not just cold-path ones")
+    args = ap.parse_args(argv)
+
+    with open(args.old) as f:
+        old = json.load(f)
+    with open(args.new) as f:
+        new = json.load(f)
+
+    rows, regressions = compare(old, new, args.threshold)
+    if not rows:
+        print("no shared numeric leaves between the two files", file=sys.stderr)
+        return 2
+
+    shown = 0
+    print(f"{'path':60s} {'old':>12s} {'new':>12s} {'delta':>8s}")
+    for path, ov, nv, delta, cold in rows:
+        if not (cold or args.all):
+            continue
+        mark = " <-- REGRESSION" if cold and delta > args.threshold else ""
+        print(f"{path:60s} {ov:12.4g} {nv:12.4g} {delta:+7.1%}{mark}")
+        shown += 1
+    print(f"# {len(rows)} shared leaves, {shown} shown, "
+          f"{len(regressions)} cold-path regression(s) above "
+          f"{args.threshold:.0%}")
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,6 +23,10 @@ section maps to a paper artifact (DESIGN.md §8):
                                   hit latency vs cold compute vs in-memory
                                   LRU hit, and the persistence-tier write
                                   overhead on the compute path (PR8)
+    coarsen_kernels    —        — device-resident coarsening + fused
+                                  v-cycle at 10^5/10^6 vertices: per-stage
+                                  cold wall, per-level shrink, peak RSS,
+                                  fused vs unrolled-segment cold path (PR9)
 """
 from __future__ import annotations
 
@@ -692,6 +696,127 @@ def bench_durability(scale: str, quick: bool):
         shutil.rmtree(root, ignore_errors=True)
 
 
+def bench_coarsen_kernels(scale: str, quick: bool):
+    """Device-resident coarsening + the scan-fused v-cycle at scale (PR 9).
+
+    Per instance: stage wall times for the ELL kernels (adjacency build,
+    one coarsen level, the full cascade), per-level shrink from the
+    O(1)-memory cascade, peak host RSS — and the headline number, the COLD
+    path (compile + run, caches cleared) of a full partition call through
+    the fused ``coarsen="ell"`` v-cycle vs the PR 8 unrolled
+    ``coarsen="segment"`` path. Full runs add a 10^6-vertex cascade-only
+    tier (the fused v-cycle's stacked uncoarsening arrays are the memory
+    bound there; the cascade carries one graph).
+    """
+    import resource
+
+    import jax
+    from repro.core import graph as G
+    from repro.core.coarsen import coarsen_cascade, coarsen_once
+    from repro.core.graph import default_ell_deg, ell_adjacency
+    from repro.core.multisection import clear_compile_cache
+    from repro.core.partition import num_levels, partition_host
+
+    section = BENCH["sections"].setdefault("coarsen_kernels", {})
+
+    def rss_mb():
+        return resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+    def cold(fn):
+        jax.clear_caches()
+        clear_compile_cache()
+        t0 = time.time()
+        jax.block_until_ready(fn())
+        return time.time() - t0
+
+    def warm(fn, reps=3):
+        jax.block_until_ready(fn())  # ensure compiled
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.time()
+            jax.block_until_ready(fn())
+            best = min(best, time.time() - t0)
+        return best
+
+    def levels_telemetry(g, lv, deg):
+        ns, ms = coarsen_cascade(g, lv, ell_deg=deg)
+        ns, ms = np.asarray(ns), np.asarray(ms)
+        per, prev = [], int(g.n)
+        for i in range(lv):
+            per.append({"n": int(ns[i]), "m": int(ms[i]),
+                        "shrink": round(prev / max(int(ns[i]), 1), 3)})
+            prev = int(ns[i])
+        return per
+
+    side = 100 if quick else 317            # 10^4 / ~10^5 vertices
+    insts = [(f"grid{side * side}", G.gen_grid(side))]
+    if not quick:
+        insts.append(("rgg100k", G.gen_rgg(100_000, seed=1)))
+    for gname, g in insts:
+        n, m = int(g.n), int(g.m)
+        deg = default_ell_deg(n, m)
+        lv = num_levels(n, 4)
+        row = {"n": n, "m": m, "ell_deg": deg, "levels": lv}
+
+        jf_ell = jax.jit(lambda gg: ell_adjacency(gg, deg)[0])
+        t_ell = warm(lambda: jf_ell(g))
+        emit(f"coarsen/{gname}/ell_build", t_ell * 1e6, f"deg={deg}")
+
+        jf_once = jax.jit(lambda gg: coarsen_once(gg, salt=1, ell_deg=deg))
+        t_once_c = cold(lambda: jf_once(g))
+        t_once = warm(lambda: jf_once(g))
+        emit(f"coarsen/{gname}/coarsen_once", t_once * 1e6,
+             f"cold_s={t_once_c:.2f}")
+
+        t_casc_c = cold(lambda: coarsen_cascade(g, lv, ell_deg=deg))
+        t_casc = warm(lambda: coarsen_cascade(g, lv, ell_deg=deg))
+        per = levels_telemetry(g, lv, deg)
+        emit(f"coarsen/{gname}/cascade{lv}", t_casc * 1e6,
+             f"cold_s={t_casc_c:.2f} shrink0={per[0]['shrink']:.2f} "
+             f"coarsest_n={per[-1]['n']}")
+        row.update({"ell_build_s": t_ell,
+                    "coarsen_once_s": t_once,
+                    "coarsen_once_cold_s": t_once_c,
+                    "cascade_s": t_casc, "cascade_cold_s": t_casc_c,
+                    "per_level": per})
+
+        # headline: COLD fused ELL v-cycle vs the PR 8 unrolled segment path
+        walls = {}
+        for mode in ("ell", "segment"):
+            t_c = cold(lambda: partition_host(g, 4, 0.03, "fast", salt=1,
+                                              coarsen=mode))
+            t_w = warm(lambda: partition_host(g, 4, 0.03, "fast", salt=1,
+                                              coarsen=mode), reps=2)
+            walls[mode] = {"cold_s": t_c, "warm_s": t_w}
+            emit(f"coarsen/{gname}/partition_cold_{mode}", t_c * 1e6,
+                 f"warm_s={t_w:.2f}")
+        speedup = walls["segment"]["cold_s"] / walls["ell"]["cold_s"]
+        emit(f"coarsen/{gname}/fused_cold_speedup",
+             walls["ell"]["cold_s"] * 1e6, f"vs_segment={speedup:.2f}x")
+        row["partition"] = walls
+        row["fused_cold_speedup_vs_segment"] = speedup
+        row["peak_rss_mb"] = rss_mb()
+        section[gname] = row
+
+    if not quick:
+        # 10^6 tier: cascade only (O(1) memory in levels), within container RAM
+        g6 = G.gen_grid(1000)
+        n6, m6 = int(g6.n), int(g6.m)
+        deg6 = default_ell_deg(n6, m6)
+        lv6 = num_levels(n6, 4)
+        t6_c = cold(lambda: coarsen_cascade(g6, lv6, ell_deg=deg6))
+        t6 = warm(lambda: coarsen_cascade(g6, lv6, ell_deg=deg6), reps=2)
+        per6 = levels_telemetry(g6, lv6, deg6)
+        emit(f"coarsen/grid1000000/cascade{lv6}", t6 * 1e6,
+             f"cold_s={t6_c:.2f} shrink0={per6[0]['shrink']:.2f} "
+             f"coarsest_n={per6[-1]['n']} rss_mb={rss_mb():.0f}")
+        section["grid1000000"] = {
+            "n": n6, "m": m6, "ell_deg": deg6, "levels": lv6,
+            "cascade_s": t6, "cascade_cold_s": t6_c, "per_level": per6,
+            "peak_rss_mb": rss_mb(),
+        }
+
+
 SECTIONS = {
     "quality_profiles": bench_quality_profiles,
     "thread_strategies": bench_thread_strategies,
@@ -704,6 +829,7 @@ SECTIONS = {
     "serve_overload": bench_serve_overload,
     "device_pipeline": bench_device_pipeline,
     "durability": bench_durability,
+    "coarsen_kernels": bench_coarsen_kernels,
 }
 
 
@@ -713,7 +839,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=["small", "large", "paper"], default="small")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SECTIONS))
-    ap.add_argument("--out", default="BENCH_PR8.json",
+    ap.add_argument("--out", default="BENCH_PR9.json",
                     help="telemetry JSON path ('' disables)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None

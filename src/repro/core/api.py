@@ -30,6 +30,9 @@ class SharedMapConfig:
     backend: str = "auto"        # refinement kernels: auto | ell | xla
     # ("ell" = Pallas lp_gain kernels over the padded [N, DEG] adjacency;
     #  "auto" picks it whenever kernels.ops.kernel_backend() is live.)
+    coarsen_telemetry: bool = False  # fill stats["coarsen"] with the root
+    # graph's per-level cascade sizes (one extra device pass; the mapping
+    # itself is unchanged). See multisection.hierarchical_multisection.
     refine_mapping: bool = False  # optional block<->PE swap pass. The paper's
     # SharedMap deliberately has none (§6.4) — with a KaFFPa-strength
     # partitioner it is unnecessary. Our JAX substrate partitioner is weaker,
@@ -96,6 +99,7 @@ def shared_map_direct(g: Graph, h: Hierarchy, cfg: SharedMapConfig,
         g, h, eps=cfg.eps, preset=cfg.preset, strategy=cfg.strategy,
         seed=cfg.seed, adaptive=cfg.adaptive, backend=cfg.backend,
         checkpoint=checkpoint, resident=resident,
+        coarsen_telemetry=cfg.coarsen_telemetry,
     )
     res.pe_of = finalize_mapping(g, h, cfg, res.pe_of, res.stats)
     return SharedMapResult(pe_of=res.pe_of, J=evaluate_J(g, h, res.pe_of), stats=res.stats)

@@ -17,7 +17,8 @@ from .graph import Graph, block_weights, edge_mask, vertex_mask
 from .refine import _vhash, lp_refine, rebalance
 
 
-@functools.partial(jax.jit, static_argnames=("k", "grow_rounds", "polish_rounds"))
+@functools.partial(jax.jit, static_argnames=("k", "grow_rounds", "polish_rounds",
+                                             "backend", "ell_deg"))
 def initial_partition(
     g: Graph,
     k: int,
@@ -25,6 +26,8 @@ def initial_partition(
     salt: int = 0,
     grow_rounds: int = 24,
     polish_rounds: int = 6,
+    backend: str = "auto",
+    ell_deg: int | None = None,
 ) -> jax.Array:
     N = g.N
     idx = jnp.arange(N, dtype=jnp.int32)
@@ -83,6 +86,12 @@ def initial_partition(
     part = jnp.where(left, fallback, part)
     part = jnp.where(vmask, part, 0)
 
-    part = lp_refine(g, part, k, Lmax, rounds=polish_rounds, salt=salt + 11)
-    part = rebalance(g, part, k, Lmax, rounds=6, salt=salt + 17)
+    # polish with the CALLER's refinement backend: "auto" resolves from the
+    # process-wide kernel backend at trace time, so leaving it here would
+    # let the coarsest polish silently diverge from the backend the
+    # partitioner pinned (breaking cross-backend bitwise invariance).
+    part = lp_refine(g, part, k, Lmax, rounds=polish_rounds, salt=salt + 11,
+                     backend=backend, ell_deg=ell_deg)
+    part = rebalance(g, part, k, Lmax, rounds=6, salt=salt + 17,
+                     backend=backend, ell_deg=ell_deg)
     return part

@@ -313,7 +313,8 @@ def _note_program(N: int, M: int, batch: int, k: int, levels: int, preset: str,
                   backend: str, ell_deg: int | None, cache_stats: dict) -> None:
     """Track XLA program reuse: the first sighting of a program key in the
     process is a compile (miss), every later one a cache hit."""
-    key = (N, M, batch, k, levels, preset, backend, ell_deg)
+    key = (N, M, batch, k, levels, preset, backend, ell_deg,
+           kops.kernel_backend())
     with _EXEC_LOCK:
         hit = key in _SEEN_SHAPES
         _SEEN_SHAPES.add(key)
@@ -933,6 +934,30 @@ def _partition_one(hg: _HostGraph, k: int, eps_val: float, preset: str,
     return part[: hg.n]
 
 
+def _coarsen_telemetry_stats(g: Graph, h: Hierarchy) -> dict:
+    """``stats["coarsen"]``: per-level shrink telemetry of the ROOT graph's
+    coarsening cascade (the depth/degree the first sub-partition uses),
+    measured with :func:`coarsen.coarsen_cascade` — O(1) device memory in
+    the level count, one ``2*levels``-scalar fetch."""
+    from .coarsen import coarsen_cascade
+    n, m = int(g.n), int(g.m)
+    arity = h.a[h.l - 1] if h.l > 0 else h.k
+    lv = num_levels(n, arity)
+    deg = default_ell_deg(n, max(m, 1))
+    ns, ms = coarsen_cascade(g, lv, ell_deg=deg)
+    ns = np.asarray(ns)
+    ms = np.asarray(ms)
+    _acct(d2h_meta_bytes=ns.nbytes + ms.nbytes, d2h_meta_fetches=2)
+    per = []
+    prev = n
+    for i in range(lv):
+        ni = int(ns[i])
+        per.append({"n": ni, "m": int(ms[i]),
+                    "shrink": round(prev / max(ni, 1), 4)})
+        prev = ni
+    return {"levels": lv, "ell_deg": deg, "rounds": 3, "per_level": per}
+
+
 def hierarchical_multisection(
     g: Graph,
     h: Hierarchy,
@@ -944,6 +969,7 @@ def hierarchical_multisection(
     backend: str = "auto",
     checkpoint: Callable[[], None] | None = None,
     resident: bool | None = None,
+    coarsen_telemetry: bool = False,
 ) -> MultisectionResult:
     """Partition ``g`` along ``h`` and return the (identity) mapping.
 
@@ -953,8 +979,13 @@ def hierarchical_multisection(
     ``resident`` applies to the planner strategies (layer/bucket/device):
     ``None``/``True`` keeps the level loop on device, ``False`` forces the
     host-mirror reference loop (bit-identical results either way).
+    ``coarsen_telemetry`` additionally runs the root graph's coarsening
+    cascade for its per-level sizes (``stats["coarsen"]``; costs one extra
+    device pass, never changes the mapping).
     """
     backend = resolve_backend(backend)
+    coarsen_stats = (_coarsen_telemetry_stats(g, h)
+                     if coarsen_telemetry else None)
     if strategy in _PLANNER_STRATEGIES:
         # the planner path: identical planning to serve/mapper, each group
         # executed alone (no cross-request members to coalesce here).
@@ -968,7 +999,10 @@ def hierarchical_multisection(
                 break
             planner.advance([execute_group_batch([gr], planner.cache_stats)[0]
                              for gr in groups])
-        return planner.result()
+        res = planner.result()
+        if coarsen_stats is not None:
+            res.stats["coarsen"] = coarsen_stats
+        return res
     if strategy not in ("naive", "queue"):
         raise ValueError(f"unknown strategy {strategy!r}")
     if resident is not None:
@@ -987,6 +1021,8 @@ def hierarchical_multisection(
              "padded_vertex_work": 0, "real_vertex_work": 0,
              "backend": backend,
              "compile_cache": {"hits": 0, "misses": 0}}
+    if coarsen_stats is not None:
+        stats["coarsen"] = coarsen_stats
     cache_stats = stats["compile_cache"]
     rec_lock = threading.Lock()
 

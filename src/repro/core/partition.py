@@ -47,43 +47,109 @@ _PRESETS = {
 }
 
 
-def num_levels(n: int, k: int, coarse_factor: int = 24) -> int:
-    """Static coarsening depth: HEM shrinks ~1.6x/level; stop near 24*k."""
+def num_levels(n: int, k: int, coarse_factor: int = 24,
+               max_degree: int | None = None) -> int:
+    """Static coarsening depth: HEM shrinks ~1.6x/level; stop near 24*k.
+
+    ``max_degree`` (when the caller has a host graph to measure it on)
+    guards against matching stalls: a degree-``d`` hub serializes its
+    whole neighbourhood behind one matching edge, so at most
+    ``n - max_degree`` pairs can form per level. On star-like graphs the
+    implied shrink collapses toward 1x — deeper levels would barely
+    shrink, so we STOP at one level; on merely hub-heavy graphs the
+    shrink lands between 1x and 1.6x and the depth is EXTENDED (capped)
+    so the coarsest graph still approaches the target size.
+    """
     target = max(coarse_factor * k, 64)
     if n <= target:
         return 0
-    return max(1, math.ceil(math.log(n / target) / math.log(1.6)))
+    base = max(1, math.ceil(math.log(n / target) / math.log(1.6)))
+    if max_degree is None:
+        return base
+    pairs = max(1, min(n // 2, n - int(max_degree)))
+    shrink = n / max(1.0, n - pairs)
+    if shrink < 1.15:
+        return 1  # stalled: coarsening cannot help, don't pay for depth
+    shrink = min(1.6, shrink)
+    lv = math.ceil(math.log(n / target) / math.log(shrink))
+    return max(1, min(lv, 2 * base + 4))
 
 
 def _partition_single(
     g: Graph, k: int, eps: jax.Array, levels: int, preset: Preset, salt: jax.Array,
-    backend: str = "auto", ell_deg: int | None = None,
+    backend: str = "auto", ell_deg: int | None = None, coarsen: str = "ell",
 ) -> jax.Array:
-    """One seeded multilevel run. Python loop over levels unrolls at trace
-    time (static count); all shapes stay (N, M)."""
+    """One seeded multilevel run; all shapes stay (N, M).
+
+    ``coarsen="ell"`` (default) is the fused v-cycle: coarsening runs
+    through the ELL kernels and both the downward (coarsen) and upward
+    (project + refine) level loops are ``lax.scan``s over stacked
+    same-shape graphs — ONE compiled loop body per (N, M, k, preset)
+    regardless of depth, instead of ``levels`` unrolled copies. That
+    removes the per-level retrace/compile cost that dominated the cold
+    path at 10^5+ vertices. ``coarsen="segment"`` keeps the seed's
+    unrolled segment-reduction path (the PR 8 baseline, and the bench
+    comparison mode).
+    """
     total = g.total_weight()
     Lmax = (1.0 + eps) * total / k
 
-    graphs = [g]
-    maps = []
-    cur = g
-    for lvl in range(levels):
-        cur, newid = coarsen_once(cur, salt=(lvl + 1) * 131 + 7)
-        graphs.append(cur)
-        maps.append(newid)
-
-    part = initial_partition(
-        graphs[-1], k, Lmax, salt=salt, polish_rounds=preset.coarsest_polish
-    )
-
-    for lvl in range(levels - 1, -1, -1):
-        part = part[maps[lvl]]  # project to finer level
-        part = lp_refine(
-            graphs[lvl], part, k, Lmax, rounds=preset.refine_rounds,
-            salt=salt + 1000 + lvl, backend=backend, ell_deg=ell_deg,
+    if levels == 0:
+        part = initial_partition(
+            g, k, Lmax, salt=salt, polish_rounds=preset.coarsest_polish,
+            backend=backend, ell_deg=ell_deg)
+    elif coarsen == "segment":
+        graphs = [g]
+        maps = []
+        cur = g
+        for lvl in range(levels):
+            cur, newid = coarsen_once(cur, salt=(lvl + 1) * 131 + 7)
+            graphs.append(cur)
+            maps.append(newid)
+        part = initial_partition(
+            graphs[-1], k, Lmax, salt=salt,
+            polish_rounds=preset.coarsest_polish,
+            backend=backend, ell_deg=ell_deg,
         )
-        part = rebalance(graphs[lvl], part, k, Lmax, rounds=4,
-                         salt=salt + 2000 + lvl, backend=backend, ell_deg=ell_deg)
+        for lvl in range(levels - 1, -1, -1):
+            part = part[maps[lvl]]  # project to finer level
+            part = lp_refine(
+                graphs[lvl], part, k, Lmax, rounds=preset.refine_rounds,
+                salt=salt + 1000 + lvl, backend=backend, ell_deg=ell_deg,
+            )
+            part = rebalance(graphs[lvl], part, k, Lmax, rounds=4,
+                             salt=salt + 2000 + lvl, backend=backend,
+                             ell_deg=ell_deg)
+    else:
+        # static DEG cap for the coarsening kernels; reuse the refinement
+        # cap when the ELL refinement backend pinned one
+        deg_c = ell_deg if ell_deg is not None else default_ell_deg(g.N, g.M)
+        csalts = (jnp.arange(levels, dtype=jnp.int32) + 1) * 131 + 7
+
+        def down(cur, sl):
+            gc, newid = coarsen_once(cur, salt=sl, ell_deg=deg_c)
+            return gc, (cur, newid)   # emit the FINE graph of this level
+
+        coarsest, (fines, maps) = jax.lax.scan(down, g, csalts)
+        part = initial_partition(
+            coarsest, k, Lmax, salt=salt,
+            polish_rounds=preset.coarsest_polish,
+            backend=backend, ell_deg=ell_deg,
+        )
+        lvls = jnp.arange(levels, dtype=jnp.int32)
+
+        def up(part, x):
+            gf, mp, lvl = x
+            part = part[mp]  # project to finer level
+            part = lp_refine(gf, part, k, Lmax, rounds=preset.refine_rounds,
+                             salt=salt + 1000 + lvl, backend=backend,
+                             ell_deg=ell_deg)
+            part = rebalance(gf, part, k, Lmax, rounds=4,
+                             salt=salt + 2000 + lvl, backend=backend,
+                             ell_deg=ell_deg)
+            return part, None
+
+        part, _ = jax.lax.scan(up, part, (fines, maps, lvls), reverse=True)
 
     for cyc in range(preset.vcycles):
         part = lp_refine(g, part, k, Lmax, rounds=preset.refine_rounds,
@@ -94,7 +160,8 @@ def _partition_single(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("k", "levels", "preset_name", "backend", "ell_deg")
+    jax.jit,
+    static_argnames=("k", "levels", "preset_name", "backend", "ell_deg", "coarsen"),
 )
 def partition(
     g: Graph,
@@ -105,6 +172,7 @@ def partition(
     salt: int | jax.Array = 0,
     backend: str = "auto",
     ell_deg: int | None = None,
+    coarsen: str = "ell",
 ) -> jax.Array:
     """Balanced k-way partition of ``g`` minimizing edge-cut.
 
@@ -113,6 +181,9 @@ def partition(
     ``ell_deg`` (static) pins the ELL degree cap for the kernel-backed
     refinement; pass one computed from the REAL vertex/edge counts (pow2
     padding skews the in-jit default by up to 2x; see core/refine.py).
+    ``coarsen`` selects the coarsening implementation: ``"ell"`` (default)
+    is the fused kernel v-cycle, ``"segment"`` the seed's unrolled
+    segment-reduction path (see ``_partition_single``).
     """
     preset = Preset.get(preset_name)
     salt = jnp.asarray(salt, jnp.int32)
@@ -122,7 +193,8 @@ def partition(
     salts = salt * 131 + jnp.arange(preset.restarts, dtype=jnp.int32) * 7919
 
     def run(s):
-        p = _partition_single(g, k, eps, levels, preset, s, backend, ell_deg)
+        p = _partition_single(g, k, eps, levels, preset, s, backend, ell_deg,
+                              coarsen)
         cut = edge_cut(g, p)
         Lmax = (1.0 + eps) * g.total_weight() / k
         over = jnp.maximum(block_weights(g, p, k) - Lmax, 0.0).sum()
@@ -138,7 +210,7 @@ _BATCHED_LOCK = threading.Lock()
 
 
 def batched_partition(k: int, levels: int, preset: str, backend: str,
-                      ell_deg: int | None) -> Callable:
+                      ell_deg: int | None, coarsen: str = "ell") -> Callable:
     """Memoized jitted vmapped partition callable ``(gs, eps, salts) ->
     [B, N] parts`` — the dispatch unit of every bucket/layer/device-level
     partition call (one executable per static key, shared process-wide
@@ -150,14 +222,20 @@ def batched_partition(k: int, levels: int, preset: str, backend: str,
     fast path on repeat calls with the same shapes (an AOT
     ``.lower().compile()`` executable measured SLOWER: its Python
     ``Compiled.__call__`` costs more than jit dispatch).
+
+    The key includes the process-wide kernel backend (REPRO_KERNEL_BACKEND):
+    coarsening + refinement dispatch through kernels/ops at TRACE time, so
+    a memoized callable is only valid for the backend it traced under
+    (the backend-invariance tests flip the env between calls).
     """
-    key = (k, levels, preset, backend, ell_deg)
+    from ..kernels import ops as kops
+    key = (k, levels, preset, backend, ell_deg, coarsen, kops.kernel_backend())
     with _BATCHED_LOCK:
         fn = _BATCHED_CACHE.get(key)
         if fn is None:
             fn = jax.jit(lambda gs, ee, ss: jax.vmap(
                 lambda g1, e1, s1: partition(g1, k, e1, levels, preset, s1,
-                                             backend, ell_deg)
+                                             backend, ell_deg, coarsen)
             )(gs, ee, ss))
             _BATCHED_CACHE[key] = fn
     return fn
@@ -169,11 +247,18 @@ def clear_batched_partition_cache() -> None:
 
 
 def partition_host(g: Graph, k: int, eps: float, preset: str = "eco", salt: int = 0,
-                   backend: str = "auto") -> jax.Array:
+                   backend: str = "auto", coarsen: str = "ell") -> jax.Array:
     """Convenience wrapper choosing level count + ELL degree cap from the
-    REAL sizes (not the padded shapes)."""
+    REAL sizes (not the padded shapes); with a host graph in hand it also
+    measures the max degree so ``num_levels`` can detect matching stalls
+    (star-like graphs) and size the cascade accordingly."""
+    import numpy as np
     from .refine import resolve_backend
-    lv = num_levels(int(g.n), k)
+    n = int(g.n)
+    ind = np.asarray(g.indptr)
+    maxdeg = int((ind[1:n + 1] - ind[:n]).max()) if n > 0 else 0
+    lv = num_levels(n, k, max_degree=maxdeg)
     deg = (default_ell_deg(int(g.n), int(g.m))
            if resolve_backend(backend) == "ell" else None)
-    return partition(g, k, jnp.float32(eps), lv, preset, salt, backend, deg)
+    return partition(g, k, jnp.float32(eps), lv, preset, salt, backend, deg,
+                     coarsen)

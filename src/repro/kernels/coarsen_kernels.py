@@ -1,0 +1,130 @@
+"""Pallas TPU kernels for coarsening: HEM proposals + contraction merge.
+
+Coarsening is the last multilevel stage without a kernel path: the seed's
+``coarsen.hem_match`` runs two ``segment_max``/``segment_min`` scatter
+passes per round over the ``[M]`` edge arrays, and ``coarsen.contract``
+two stable argsorts. The TPU-native restatement works row-wise over the
+padded ``[N, DEG]`` ELL adjacency (same layout as ``lp_gain``):
+
+``hem_propose`` — one program instance scans ``TILE_V`` rows: load the
+    ``adj/adw/jit`` tiles, gather matched flags from the VMEM-resident
+    ``matched`` vector, take the per-row max jittered score and the
+    smallest-id tie-break. Replaces both segment passes with a single
+    streaming pass, no scatters.
+
+``contract_edges`` — one program instance merges ``TILE_C`` coarse rows:
+    each row holds the ``2*DEG`` coarse-mapped neighbour candidates of its
+    (<= 2) fine members; a fixed-order compare/accumulate chain dedups ids
+    and sums weights. Fully tiled — NO resident vectors — so it scales
+    with HBM, not VMEM.
+
+Both kernel bodies execute the SAME jnp code as the oracles
+(kernels/ref.py: ``hem_row_scan`` / ``merge_dedup_rows``), so pallas /
+interpret / xla agree BITWISE: score math is elementwise f32, reductions
+are max/min/int-only, and weight totals are a fixed add chain XLA never
+reassociates. The device-resident multisection's shadow-verification twin
+(PR 8) depends on this; tested in tests/test_coarsen_kernels.py.
+
+VMEM budget per instance: hem_propose holds ``matched [Np] i32`` resident
+(+3 row tiles), so Np <~ 3M rows on a 16 MB core; contract_edges holds
+only its tiles (~``TILE_C * 2*DEG * 4 * 4`` bytes). See DESIGN.md §13.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+TILE_V = 256   # hem_propose rows per program instance (see lp_gain.TILE_V)
+TILE_C = 256   # contract_edges rows per program instance
+
+
+def _hem_propose_kernel(adj_ref, adw_ref, jit_ref, matched_ref, prop_ref,
+                        *, n_ids: int):
+    i = pl.program_id(0)
+    adj = adj_ref[...]            # [TILE_V, DEG] i32
+    adw = adw_ref[...]            # [TILE_V, DEG] f32
+    jit = jit_ref[...]            # [TILE_V, DEG] f32
+    matched = matched_ref[...]    # [Np] i32 (resident; padded rows = 1)
+    T = adj.shape[0]
+    u = i * T + jax.lax.broadcasted_iota(jnp.int32, (T, 1), 0)[:, 0]
+    prop_ref[...] = ref.hem_row_scan(adj, adw, jit, matched, u, n_ids)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hem_propose_pallas(adj: jax.Array, adw: jax.Array, jit: jax.Array,
+                       matched: jax.Array, interpret: bool = True) -> jax.Array:
+    """Per-row HEM proposal over ELL adjacency. Returns [N] i32 (N = none).
+
+    ``matched`` is the [N] 0/1 i32 matched vector; padding rows must be
+    matched (the wrapper pads with 1 so tile-pad rows propose nothing).
+    """
+    N, DEG = adj.shape
+    Np = ((N + TILE_V - 1) // TILE_V) * TILE_V
+    padv = Np - N
+    adj_p = jnp.pad(adj, ((0, padv), (0, 0)), constant_values=N)
+    adw_p = jnp.pad(adw, ((0, padv), (0, 0)))
+    jit_p = jnp.pad(jit, ((0, padv), (0, 0)))
+    mat_p = jnp.pad(matched, (0, padv), constant_values=1)
+    prop = pl.pallas_call(
+        functools.partial(_hem_propose_kernel, n_ids=N),
+        grid=(Np // TILE_V,),
+        in_specs=[
+            pl.BlockSpec((TILE_V, DEG), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_V, DEG), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_V, DEG), lambda i: (i, 0)),
+            pl.BlockSpec((Np,), lambda i: (0,)),          # matched resident
+        ],
+        out_specs=pl.BlockSpec((TILE_V,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Np,), jnp.int32),
+        interpret=interpret,
+    )(adj_p, adw_p, jit_p, mat_p)
+    return prop[:N]
+
+
+def _contract_edges_kernel(cand_ref, candw_ref, nbr_ref, w_ref, cnt_ref,
+                           *, sent: int):
+    nbr, w, cnt = ref.merge_dedup_rows(cand_ref[...], candw_ref[...], sent)
+    nbr_ref[...] = nbr
+    w_ref[...] = w
+    cnt_ref[...] = cnt
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def contract_edges_pallas(cand: jax.Array, candw: jax.Array,
+                          interpret: bool = True):
+    """Row-local merge/dedup/accumulate for contraction.
+
+    ``cand [N, D2]`` holds coarse neighbour ids (sentinel ``N`` = invalid,
+    weight 0). Returns ``(nbr [N, D2], w [N, D2], cnt [N])`` — see
+    ref.merge_dedup_rows. Fully tiled: no resident vectors.
+    """
+    N, D2 = cand.shape
+    Np = ((N + TILE_C - 1) // TILE_C) * TILE_C
+    padv = Np - N
+    cand_p = jnp.pad(cand, ((0, padv), (0, 0)), constant_values=N)
+    candw_p = jnp.pad(candw, ((0, padv), (0, 0)))
+    nbr, w, cnt = pl.pallas_call(
+        functools.partial(_contract_edges_kernel, sent=N),
+        grid=(Np // TILE_C,),
+        in_specs=[
+            pl.BlockSpec((TILE_C, D2), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_C, D2), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((TILE_C, D2), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_C, D2), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_C,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np, D2), jnp.int32),
+            jax.ShapeDtypeStruct((Np, D2), candw.dtype),
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(cand_p, candw_p)
+    return nbr[:N], w[:N], cnt[:N]

@@ -26,6 +26,7 @@ import jax
 import jax.numpy as jnp
 
 from . import ref
+from .coarsen_kernels import contract_edges_pallas, hem_propose_pallas
 from .flashattn import flash_attention_pallas
 from .lp_gain import lp_gain_pallas
 from .mapcost import mapcost_pallas
@@ -88,6 +89,35 @@ def gather_rows(src, idx, use_pallas: bool | None = None):
     if use_pallas:
         return gather_rows_pallas(src, idx, interpret=interpret)
     return ref.gather_rows_ref(src, idx)
+
+
+def hem_propose(adj, adw, jit, matched, use_pallas: bool | None = None):
+    """Per-row HEM proposal scan over the [N, DEG] ELL adjacency.
+
+    ``matched`` is the [N] 0/1 i32 matched vector; returns [N] i32
+    proposals (N = no proposal). Score math is elementwise f32 and the
+    only reductions are max/min, so pallas/interpret/xla agree BITWISE
+    (the coarsening cascade's determinism depends on this; tested in
+    test_coarsen_kernels).
+    """
+    use_pallas, interpret = dispatch(use_pallas)
+    if use_pallas:
+        return hem_propose_pallas(adj, adw, jit, matched, interpret=interpret)
+    return ref.hem_propose_ref(adj, adw, jit, matched)
+
+
+def contract_edges(cand, candw, use_pallas: bool | None = None):
+    """Row-local merge/dedup/accumulate for contraction.
+
+    ``cand [N, D2]`` holds the coarse-mapped neighbour candidates of each
+    coarse row's fine members (sentinel N = invalid, weight 0). Returns
+    ``(nbr, w, cnt)``; weight totals use a fixed add chain, so backends
+    agree BITWISE (see kernels/ref.py:merge_dedup_rows).
+    """
+    use_pallas, interpret = dispatch(use_pallas)
+    if use_pallas:
+        return contract_edges_pallas(cand, candw, interpret=interpret)
+    return ref.contract_edges_ref(cand, candw, cand.shape[0])
 
 
 def flash_attention(q, k, v, causal: bool = True, window: int = 0,

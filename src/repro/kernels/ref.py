@@ -76,6 +76,77 @@ def csr_to_ell(rows, cols, ewgt, N: int, DEG: int):
     return adj.reshape(N, DEG), adw.reshape(N, DEG)
 
 
+def hem_row_scan(adj, adw, jit, matched, u, n_ids: int):
+    """Shared per-row heaviest-free-neighbour scan (HEM proposal step).
+
+    ``adj``/``adw``/``jit`` are ``[T, DEG]`` row tiles of the padded ELL
+    adjacency (neighbour id ``n_ids`` = padding), ``matched`` a 0/1 i32
+    matched vector covering at least ``n_ids`` entries (the Pallas wrapper
+    pads it to a tile multiple, hence the explicit sentinel), ``u`` the
+    ``[T]`` global row ids of the tile. Returns the ``[T]`` i32 proposal
+    per row (``n_ids`` = no proposal).
+
+    This body is executed verbatim by BOTH the Pallas kernel
+    (kernels/coarsen_kernels.py, on VMEM tiles) and the jnp oracle
+    (:func:`hem_propose_ref`, on the full array) — one source of truth, so
+    the backends agree bitwise: the score is elementwise f32, the only
+    reductions are max/min (rounding-free), the gathers pure data
+    movement.
+    """
+    Nm = matched.shape[0]
+    nbr_matched = matched[jnp.clip(adj, 0, Nm - 1)]
+    own_matched = matched[jnp.clip(u, 0, Nm - 1)]
+    valid = ((adj < n_ids) & (adj != u[:, None])
+             & (own_matched[:, None] == 0) & (nbr_matched == 0))
+    jj = jit * 1e-3
+    score = jnp.where(valid, adw * (1.0 + jj) + jj, -jnp.inf)
+    best = jnp.max(score, axis=1)                       # order-free (max)
+    has = best > -jnp.inf
+    # tie-break: smallest neighbour id among best-scoring free edges
+    cand = jnp.where(valid & (score == best[:, None]), adj, n_ids)
+    prop = jnp.min(cand, axis=1)
+    return jnp.where(has, prop, n_ids).astype(jnp.int32)
+
+
+def hem_propose_ref(adj, adw, jit, matched):
+    """jnp oracle for the hem_propose kernel: full-array row scan."""
+    u = jnp.arange(adj.shape[0], dtype=jnp.int32)
+    return hem_row_scan(adj, adw, jit, matched, u, adj.shape[0])
+
+
+def merge_dedup_rows(cand, candw, sent: int):
+    """Shared per-row merge/dedup/accumulate (contraction step).
+
+    ``cand [T, D2]`` holds coarse neighbour ids (``sent`` = invalid slot,
+    weight 0 there); returns ``(nbr [T, D2], w [T, D2], cnt [T])`` where
+    ``nbr`` keeps each distinct id at its FIRST slot (others ``sent``),
+    ``w`` the per-id weight total, ``cnt`` the distinct count per row.
+
+    Weight totals are accumulated as a FIXED chain of ``D2`` adds in slot
+    order — XLA never reassociates distinct f32 adds, so the Pallas
+    kernel (tiles) and the jnp oracle (full array) agree bitwise; the
+    first-occurrence and count passes are integer-only (order-free).
+    """
+    D2 = cand.shape[-1]
+    acc = jnp.zeros_like(candw)
+    for i in range(D2):
+        acc = acc + jnp.where(cand == cand[:, i:i + 1], candw[:, i:i + 1], 0.0)
+    firstpos = jnp.full(cand.shape, D2, jnp.int32)
+    for i in range(D2 - 1, -1, -1):
+        firstpos = jnp.where(cand == cand[:, i:i + 1], i, firstpos)
+    colid = jax.lax.broadcasted_iota(jnp.int32, cand.shape, 1)
+    is_first = (firstpos == colid) & (cand != sent)
+    nbr = jnp.where(is_first, cand, sent).astype(jnp.int32)
+    w = jnp.where(is_first, acc, 0.0)
+    cnt = jnp.sum(is_first.astype(jnp.int32), axis=1)
+    return nbr, w, cnt
+
+
+def contract_edges_ref(cand, candw, sent: int):
+    """jnp oracle for the contract_edges kernel."""
+    return merge_dedup_rows(cand, candw, sent)
+
+
 def flash_ref(q, k, v, causal: bool = True, window: int = 0):
     """Oracle SDPA for the flash kernel. q/k/v [BH, S, D] -> [BH, S, D]."""
     S = q.shape[1]

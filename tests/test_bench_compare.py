@@ -1,0 +1,80 @@
+"""benchmarks/compare.py: bench-telemetry diffing and the cold-path gate."""
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.compare import compare, main, numeric_leaves  # noqa: E402
+
+
+def _bench(cold, warm, extra=None):
+    sec = {"coarsen_kernels": {"grid10000": {
+        "cascade_cold_s": cold, "cascade_s": warm, "n": 10_000,
+        "per_level": [{"n": 5500, "shrink": 1.82}],
+    }}}
+    if extra:
+        sec["coarsen_kernels"]["grid10000"].update(extra)
+    return {"sections": sec}
+
+
+def test_numeric_leaves_walks_nested_lists_and_skips_bools():
+    tree = {"a": 1, "b": [{"c": 2.5}], "d": True, "e": "str"}
+    leaves = dict(numeric_leaves(tree))
+    assert leaves == {"a": 1.0, "b[0].c": 2.5}
+
+
+def test_self_diff_is_clean():
+    b = _bench(10.0, 1.0)
+    rows, regressions = compare(b, b, threshold=0.2)
+    assert rows and not regressions
+    assert all(delta == 0.0 for _, _, _, delta, _ in rows)
+
+
+def test_cold_regression_over_threshold_flagged():
+    old, new = _bench(10.0, 1.0), _bench(13.0, 1.0)  # cold +30%
+    _, regressions = compare(old, new, threshold=0.2)
+    assert len(regressions) == 1
+    path, ov, nv, delta = regressions[0]
+    assert "cascade_cold_s" in path
+    assert delta == pytest.approx(0.3)
+
+
+def test_warm_regression_not_gated():
+    # warm +300% is informational only; the gate watches cold-path leaves
+    old, new = _bench(10.0, 1.0), _bench(10.0, 4.0)
+    _, regressions = compare(old, new, threshold=0.2)
+    assert not regressions
+
+
+def test_cold_improvement_passes():
+    old, new = _bench(10.0, 1.0), _bench(5.0, 1.0)
+    _, regressions = compare(old, new, threshold=0.2)
+    assert not regressions
+
+
+def test_unpaired_and_zero_leaves_ignored():
+    old = _bench(10.0, 1.0, extra={"old_only_cold_s": 99.0, "zero": 0.0})
+    new = _bench(10.0, 1.0, extra={"new_only_cold_s": 99.0, "zero": 0.0})
+    rows, regressions = compare(old, new, threshold=0.2)
+    assert not regressions
+    paths = {p for p, *_ in rows}
+    assert not any("only_cold" in p for p in paths)
+    assert not any(p.endswith(".zero") for p in paths)
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    po, pn = tmp_path / "old.json", tmp_path / "new.json"
+    po.write_text(json.dumps(_bench(10.0, 1.0)))
+
+    pn.write_text(json.dumps(_bench(10.5, 1.0)))  # +5% cold: within gate
+    assert main([str(po), str(pn)]) == 0
+
+    pn.write_text(json.dumps(_bench(15.0, 1.0)))  # +50% cold: regression
+    assert main([str(po), str(pn)]) == 1
+    assert "REGRESSION" in capsys.readouterr().out
+
+    pn.write_text(json.dumps({"sections": {}}))   # nothing to pair
+    assert main([str(po), str(pn)]) == 2

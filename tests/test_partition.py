@@ -172,6 +172,44 @@ def test_num_levels_monotone():
     assert num_levels(100, 4) <= num_levels(10_000, 4) <= num_levels(1_000_000, 4)
 
 
+def test_num_levels_matching_stalls():
+    """``max_degree`` shapes the cascade depth (PR 9): a star graph stalls
+    matching (one pair per round), so depth collapses to 1 instead of
+    paying for levels that cannot shrink; hub-heavy graphs EXTEND depth
+    (bounded), and low-degree graphs keep the base schedule."""
+    n, k = 10_000, 4
+    base = num_levels(n, k)
+    assert base > 1
+    # star: hub adjacent to all -> shrink ~ n/(n-1) -> stop at one level
+    assert num_levels(n, k, max_degree=n - 1) == 1
+    # mesh-like: max degree far below n leaves the base schedule intact
+    assert num_levels(n, k, max_degree=8) == base
+    # hub-heavy: shrink between 1.15x and 1.6x extends depth, but bounded
+    hubbed = num_levels(n, k, max_degree=int(n * 0.7))
+    assert base < hubbed <= 2 * base + 4
+    # degenerate graphs never go below one level
+    assert num_levels(200, k, max_degree=199) == 1
+
+
+def test_partition_host_star_graph():
+    """End-to-end: partition_host on a star graph must detect the stall
+    from the measured max degree and still return a balanced partition."""
+    n = 512
+    hub = np.zeros(n - 1, np.int32)
+    leaf = np.arange(1, n, dtype=np.int32)
+    rows = np.concatenate([hub, leaf])
+    cols = np.concatenate([leaf, hub])
+    order = np.argsort(rows, kind="stable")
+    g = G.assemble_padded(np.ones(n, np.float32), rows[order], cols[order],
+                          np.ones(2 * (n - 1), np.float32),
+                          n, n, 2 * (n - 1))
+    k, eps = 4, 0.05
+    part = np.asarray(partition_host(g, k, eps, "fast", salt=1))
+    assert set(np.unique(part[:n])) <= set(range(k))
+    w = np.bincount(part[:n], minlength=k).astype(float)
+    assert w.max() <= (1.0 + eps) * n / k + 1
+
+
 # --- PR3: kernel-backed refinement (ELL backend) ------------------------------
 
 def test_refine_default_matches_seed_xla_path():

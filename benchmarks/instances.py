@@ -7,6 +7,7 @@ from __future__ import annotations
 
 from repro.core import graph as G
 from repro.core.hierarchy import Hierarchy
+from repro.core.taskgraph import TaskGraph
 
 # name -> (generator, default n)
 SMALL = {
@@ -24,12 +25,19 @@ LARGE = {
 
 
 def instances(scale: str = "small"):
+    """Yields ``(name, TaskGraph)`` per family — the generators' CSR output
+    enters through the workload-ingestion layer (PR 10), so benchmark
+    instances carry provenance + a content fingerprint like every other
+    workload; ``.to_graph()`` recovers the CSR for kernels that need it."""
     table = dict(SMALL)
     if scale in ("large", "paper"):
         table.update(LARGE)
     mult = 8 if scale == "paper" else 1
     for name, (gen, n) in table.items():
-        yield name, gen(n * mult, 0)
+        yield name, TaskGraph.from_graph(
+            gen(n * mult, 0),
+            meta={"source": "generator", "family": name, "scale": scale,
+                  "seed": 0})
 
 
 # the paper's experimental hierarchy family: H = 4:8:{1..6}, D = 1:10:100

@@ -27,6 +27,11 @@ section maps to a paper artifact (DESIGN.md §8):
                                   v-cycle at 10^5/10^6 vertices: per-stage
                                   cold wall, per-level shrink, peak RSS,
                                   fused vs unrolled-segment cold path (PR9)
+    model_graphs       —        — the ingestion closed loop: compile a
+                                  model-zoo arch, extract its HLO comm
+                                  graph (TaskGraph), SharedMap it onto the
+                                  physical hierarchy, J vs the default
+                                  placement (PR10; doubles as CI smoke)
 """
 from __future__ import annotations
 
@@ -62,15 +67,17 @@ def bench_quality_profiles(scale: str, quick: bool):
     algos = ["sharedmap", "sharedmap_r", "gm", "random"] + ([] if quick else ["kaffpamap"])
     hs = list(paper_hierarchies(1 if quick else 2))
     results = {a: [] for a in algos}
-    for gname, g in instances(scale):
+    for gname, tg in instances(scale):
+        g = tg.to_graph()  # baselines + evaluate_J run on the CSR form
         for h in hs:
             for algo in algos:
                 t0 = time.time()
                 if algo == "sharedmap":
-                    J = shared_map(g, h, SharedMapConfig(preset="fast")).J
+                    # fed the TaskGraph form: exercises the ingestion layer
+                    J = shared_map(tg, h, SharedMapConfig(preset="fast")).J
                 elif algo == "sharedmap_r":
-                    J = shared_map(g, h, SharedMapConfig(preset="fast",
-                                                         refine_mapping=True)).J
+                    J = shared_map(tg, h, SharedMapConfig(preset="fast",
+                                                          refine_mapping=True)).J
                 elif algo == "gm":
                     res = global_multisection(g, h, preset="fast")
                     J = evaluate_J(g, h, res.pe_of)
@@ -170,7 +177,8 @@ def bench_scalability(scale: str, quick: bool):
     from benchmarks.instances import instances
     from repro.core.partition import num_levels, partition
 
-    gname, g = next(instances(scale))
+    gname, tg = next(instances(scale))
+    g = tg.to_graph()
     lv = num_levels(int(g.n), 8)
     for lanes in ([1, 4] if quick else [1, 2, 4, 8]):
         def run(salts):
@@ -190,7 +198,7 @@ def bench_mapping_vs_default(scale: str, quick: bool):
                                    sharedmap_device_order)
 
     for multi_pod in (False, True):
-        g = logical_comm_graph(multi_pod)
+        g = logical_comm_graph(multi_pod).to_graph()
         h = physical_hierarchy(multi_pod)
         k = h.k
         t0 = time.time()
@@ -213,7 +221,8 @@ def bench_refine_backends(scale: str, quick: bool):
     from repro.core.partition import partition_host
 
     section = BENCH["sections"].setdefault("refine_backends", {})
-    for gname, g in instances(scale):
+    for gname, tg in instances(scale):
+        g = tg.to_graph()
         row = {}
         for be in ("xla", "ell"):
             jax.block_until_ready(partition_host(g, 8, 0.03, "fast", salt=1, backend=be))  # warm
@@ -817,6 +826,57 @@ def bench_coarsen_kernels(scale: str, quick: bool):
         }
 
 
+def bench_model_graphs(scale: str, quick: bool):
+    """The PR 10 closed loop: HLO → TaskGraph → shared_map on the physical
+    chip hierarchy, for real model-zoo archs.
+
+    Per arch: compile a tiny single-device train cell (abstract params),
+    extract the per-op communication graph (``launch/comm_graph.py``), map
+    it onto ``physical_hierarchy()`` (k=256), and compare ``evaluate_J``
+    against the default program-order placement. Extraction and mapping
+    walls are COLD (one-shot, compile-dominated) — the gateable cost of
+    "map the model you're about to launch". The J improvement must be
+    strict: this section doubles as the CI model-graph smoke.
+    """
+    from repro.core.api import SharedMapConfig, shared_map_direct
+    from repro.core.mapping import evaluate_J
+    from repro.launch.comm_graph import default_placement, model_comm_graph
+    from repro.launch.mesh import physical_hierarchy
+
+    archs = ["whisper-tiny"] if quick else ["whisper-tiny", "xlstm-125m"]
+    h = physical_hierarchy(False)
+    section = BENCH["sections"].setdefault("model_graphs", {})
+    for arch in archs:
+        t0 = time.time()
+        tg = model_comm_graph(arch, min_tasks=2 * h.k)
+        extract_cold_s = time.time() - t0
+        g = tg.to_graph()
+        t0 = time.time()
+        res = shared_map_direct(g, h, SharedMapConfig(preset="fast"))
+        map_cold_s = time.time() - t0
+        j_def = evaluate_J(g, h, default_placement(tg.n, h.k))
+        improvement = j_def / max(res.J, 1e-12)
+        assert res.J < j_def, (
+            f"{arch}: shared_map J={res.J} did not beat default placement "
+            f"J={j_def} — the closed-loop contract is broken")
+        emit(f"model_graphs/extract/{arch}", extract_cold_s * 1e6,
+             f"tasks={tg.n} edges={tg.m} gran={tg.meta['granularity']}")
+        emit(f"model_graphs/map/{arch}", map_cold_s * 1e6,
+             f"J={res.J:.3g} J_default={j_def:.3g} "
+             f"improvement={improvement:.2f}x")
+        section[arch] = {
+            "tasks": tg.n, "task_edges": tg.m,
+            "granularity": tg.meta["granularity"],
+            "fingerprint": tg.fingerprint().hex(),
+            "extract_cold_s": extract_cold_s,
+            "map_cold_s": map_cold_s,
+            "J_sharedmap": res.J,
+            "J_default": j_def,
+            "improvement": improvement,
+            "k": h.k,
+        }
+
+
 SECTIONS = {
     "quality_profiles": bench_quality_profiles,
     "thread_strategies": bench_thread_strategies,
@@ -830,6 +890,7 @@ SECTIONS = {
     "device_pipeline": bench_device_pipeline,
     "durability": bench_durability,
     "coarsen_kernels": bench_coarsen_kernels,
+    "model_graphs": bench_model_graphs,
 }
 
 
@@ -839,7 +900,7 @@ def main() -> None:
     ap.add_argument("--scale", choices=["small", "large", "paper"], default="small")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SECTIONS))
-    ap.add_argument("--out", default="BENCH_PR9.json",
+    ap.add_argument("--out", default="BENCH_PR10.json",
                     help="telemetry JSON path ('' disables)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None

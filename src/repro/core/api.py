@@ -15,6 +15,7 @@ from .graph import Graph
 from .hierarchy import Hierarchy
 from .mapping import evaluate_J
 from .multisection import hierarchical_multisection
+from .taskgraph import TaskGraph
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,8 +68,14 @@ def current_service():
     return _SERVICE
 
 
-def shared_map(g: Graph, h: Hierarchy, config: SharedMapConfig | None = None) -> SharedMapResult:
+def shared_map(g: Graph | TaskGraph, h: Hierarchy,
+               config: SharedMapConfig | None = None) -> SharedMapResult:
     """Solve GPMP for communication graph ``g`` on hierarchy ``h``.
+
+    ``g`` is either the canonical CSR :class:`Graph` or a workload-layer
+    :class:`TaskGraph` (``core/taskgraph.py``); a TaskGraph is lowered via
+    its cached ``to_graph()``, so both spellings produce bit-identical
+    results, and the service keys its caches on ``TaskGraph.fingerprint()``.
 
     When a mapping service is installed (serve.mapper), the request is
     served through it — coalesced with concurrent requests and answered
@@ -81,7 +88,7 @@ def shared_map(g: Graph, h: Hierarchy, config: SharedMapConfig | None = None) ->
     return shared_map_direct(g, h, cfg)
 
 
-def shared_map_direct(g: Graph, h: Hierarchy, cfg: SharedMapConfig,
+def shared_map_direct(g: Graph | TaskGraph, h: Hierarchy, cfg: SharedMapConfig,
                       checkpoint=None, resident=None) -> SharedMapResult:
     """The in-process path (no service indirection); also the fallback the
     service itself uses for the non-plannable strategies (naive/queue).
@@ -95,6 +102,8 @@ def shared_map_direct(g: Graph, h: Hierarchy, cfg: SharedMapConfig,
     ``resident=False`` to run a request on the bitwise host-ref twin of
     the device pipeline, and its worker processes forward the session's
     device-quarantine decision the same way."""
+    if isinstance(g, TaskGraph):
+        g = g.to_graph()
     res = hierarchical_multisection(
         g, h, eps=cfg.eps, preset=cfg.preset, strategy=cfg.strategy,
         seed=cfg.seed, adaptive=cfg.adaptive, backend=cfg.backend,

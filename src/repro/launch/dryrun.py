@@ -3,6 +3,8 @@
 Usage:
     PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k --mesh pod1
     PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+    PYTHONPATH=src python -m repro.launch.dryrun --arch whisper-tiny \
+        --shape train_4k --mesh pod1 --map     # + SharedMap placement loop
 
 Writes one JSON line per cell (incremental — crashes/restarts resume by
 skipping completed cells). The roofline report reads this file.
@@ -114,7 +116,8 @@ def lower_cell(cfg, cell, mesh, ctx, serve_bf16: bool = False):
                                       slstm_chunk=ctx.slstm_chunk), {}
 
 
-def run_cell(arch: str, cell, multi_pod: bool, knobs: dict | None = None) -> dict:
+def run_cell(arch: str, cell, multi_pod: bool, knobs: dict | None = None,
+             map_placement: bool = False) -> dict:
     cfg = get_config(arch)
     chips = 512 if multi_pod else 256
     mesh = make_production_mesh(multi_pod=multi_pod)
@@ -173,6 +176,38 @@ def run_cell(arch: str, cell, multi_pod: bool, knobs: dict | None = None) -> dic
     mf = 6 * n_active * tokens if cell.mode == "train" else 2 * n_active * tokens
     rec["model_flops_global"] = float(mf)
     rec["useful_ratio"] = float(mf / max(an.flops * chips, 1.0))
+
+    if map_placement:
+        # PR 10 closed loop: the compiled HLO's per-op communication graph,
+        # mapped onto the physical chip hierarchy by SharedMap, scored
+        # against the default (program-order) placement — next to the
+        # roofline collective term it would discount.
+        from repro.core.api import SharedMapConfig, shared_map
+        from repro.core.mapping import evaluate_J
+        from repro.launch.comm_graph import default_placement, extract_comm_graph
+        from repro.launch.mesh import physical_hierarchy
+
+        h = physical_hierarchy(multi_pod)
+        t0 = time.time()
+        tg = extract_comm_graph(hlo, trip_hints=hints, min_tasks=2 * h.k)
+        extract_s = time.time() - t0
+        if tg.n < h.k:
+            rec["map"] = {"skipped": f"graph has {tg.n} tasks < k={h.k}"}
+        else:
+            g = tg.to_graph()
+            t0 = time.time()
+            res = shared_map(g, h, SharedMapConfig(preset="fast"))
+            map_s = time.time() - t0
+            j_def = evaluate_J(g, h, default_placement(tg.n, h.k))
+            rec["map"] = {
+                "tasks": tg.n, "task_edges": tg.m,
+                "granularity": tg.meta["granularity"],
+                "extract_s": round(extract_s, 2),
+                "map_s": round(map_s, 2),
+                "J_sharedmap": res.J, "J_default": j_def,
+                "improvement": j_def / max(res.J, 1e-12),
+                "roofline_collective_s": rec["roofline"]["collective_s"],
+            }
     return rec
 
 
@@ -183,6 +218,10 @@ def main():
     ap.add_argument("--mesh", choices=["pod1", "pod2", "both"], default="both")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun.jsonl")
+    ap.add_argument("--map", action="store_true", dest="map_placement",
+                    help="extract the HLO communication graph and SharedMap "
+                         "it onto the physical hierarchy (closed loop); adds "
+                         "a 'map' record with J vs the default placement")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args()
 
@@ -223,12 +262,19 @@ def main():
                 continue
             print(f"[run ] {tag} ...", flush=True)
             try:
-                rec = run_cell(arch, cell, multi_pod=(mname == "pod2"))
+                rec = run_cell(arch, cell, multi_pod=(mname == "pod2"),
+                               map_placement=args.map_placement)
                 rl = rec["roofline"]
                 print(f"[ ok ] {tag}: compute={rl['compute_s']:.3f}s "
                       f"mem={rl['memory_s']:.3f}s coll={rl['collective_s']:.3f}s "
                       f"dom={rl['dominant']} compile={rec['compile_s']}s",
                       flush=True)
+                mp = rec.get("map")
+                if mp and "skipped" not in mp:
+                    print(f"[ map] {tag}: tasks={mp['tasks']} "
+                          f"J={mp['J_sharedmap']:.3g} vs default "
+                          f"{mp['J_default']:.3g} "
+                          f"({mp['improvement']:.2f}x better)", flush=True)
             except Exception as e:  # record failures; the sweep continues
                 rec = {"arch": arch, "shape": cell.name, "mesh": mname,
                        "error": f"{type(e).__name__}: {e}",

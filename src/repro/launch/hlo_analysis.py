@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import re
+import warnings
 from collections import defaultdict
 
 _DTYPE_BYTES = {
@@ -187,35 +188,29 @@ _MEM_SKIP = {
 }
 
 
-@dataclasses.dataclass
-class Analysis:
-    flops: float                     # per-device, trip-scaled (dots+convs)
-    collective_bytes: dict[str, float]  # per kind, per-device, trip-scaled
-    hbm_bytes: float                 # fusion-aware per-device traffic
-    num_collectives: dict[str, int]
-    while_trips: list[int]
-
-    @property
-    def total_collective_bytes(self) -> float:
-        return sum(self.collective_bytes.values())
-
-
-def analyze_hlo(hlo: str, trip_hints: list[int] | None = None) -> Analysis:
-    comps = parse_computations(hlo)
-    entry = next((c for c in comps.values() if c.is_entry), None)
-    if entry is None:
-        raise ValueError("no ENTRY computation found")
-
-    # fusion bodies are accounted for by their fusion op
+def fusion_body_set(comps: dict[str, Computation]) -> set[str]:
+    """Computations called by a ``fusion`` op (accounted via the op)."""
     fusion_bodies: set[str] = set()
     for c in comps.values():
         for op in c.ops:
             if op.kind == "fusion":
                 for called in _CALLED_RE.findall(op.line):
                     fusion_bodies.add(called)
+    return fusion_bodies
 
-    # multipliers via DFS over the call graph; whiles consume trip hints in
-    # DFS (nesting) order.
+
+def call_multipliers(comps: dict[str, Computation], entry_name: str,
+                     fusion_bodies: set[str],
+                     trip_hints: list[int] | None = None,
+                     ) -> tuple[dict[str, float], list[int], int]:
+    """Execution-count multipliers per computation, via DFS over the call
+    graph. `while` ops consume ``trip_hints`` in DFS (nesting) order; when
+    the hints run out, the LAST hint is reused (1 with no hints at all).
+
+    Returns ``(mult, trips_used, hints_needed)`` where ``hints_needed`` is
+    the number of `while` visits — callers compare it against
+    ``len(trip_hints)`` to detect the shortfall (``Analysis.hints_exhausted``).
+    """
     hints = list(trip_hints or [])
     hint_i = 0
     mult: dict[str, float] = defaultdict(float)
@@ -231,9 +226,9 @@ def analyze_hlo(hlo: str, trip_hints: list[int] | None = None) -> Analysis:
                 body_cond = _CALLED_RE.findall(op.line)
                 if hints:
                     trip = hints[min(hint_i, len(hints) - 1)]
-                    hint_i += 1
                 else:
                     trip = 1
+                hint_i += 1
                 trips_used.append(trip)
                 for callee in body_cond:
                     visit(callee, m * trip)
@@ -246,7 +241,46 @@ def analyze_hlo(hlo: str, trip_hints: list[int] | None = None) -> Analysis:
                     if callee in comps and callee not in fusion_bodies:
                         visit(callee, m)
 
-    visit(entry.name, 1.0)
+    visit(entry_name, 1.0)
+    return dict(mult), trips_used, hint_i
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float                     # per-device, trip-scaled (dots+convs)
+    collective_bytes: dict[str, float]  # per kind, per-device, trip-scaled
+    hbm_bytes: float                 # fusion-aware per-device traffic
+    num_collectives: dict[str, int]
+    while_trips: list[int]
+    # trip-hint accounting: the DFS needed more hints than it was given
+    # (the last hint was reused for the excess `while` ops — a guess).
+    hints_exhausted: bool = False
+    while_hints_needed: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+def analyze_hlo(hlo: str, trip_hints: list[int] | None = None) -> Analysis:
+    comps = parse_computations(hlo)
+    entry = next((c for c in comps.values() if c.is_entry), None)
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+
+    fusion_bodies = fusion_body_set(comps)
+    hints = list(trip_hints or [])
+    mult, trips_used, hints_needed = call_multipliers(
+        comps, entry.name, fusion_bodies, hints)
+    hints_exhausted = hints_needed > len(hints) and hints_needed > 0
+    if hints and hints_exhausted:
+        # warn once per analyze call (not per while op): silent reuse of the
+        # last hint is a guess the caller should know about.
+        warnings.warn(
+            f"analyze_hlo: {hints_needed} `while` ops but only {len(hints)} "
+            f"trip hint(s); reusing the last hint for the remainder "
+            f"(trip-scaled terms are a guess past hint "
+            f"#{len(hints)})", stacklevel=2)
 
     shapes_by_comp: dict[str, dict[str, str]] = {
         cname: {op.name: op.type_str for op in c.ops} for cname, c in comps.items()
@@ -329,4 +363,6 @@ def analyze_hlo(hlo: str, trip_hints: list[int] | None = None) -> Analysis:
         hbm_bytes=hbm,
         num_collectives=dict(coll_count),
         while_trips=trips_used,
+        hints_exhausted=hints_exhausted,
+        while_hints_needed=hints_needed,
     )

@@ -18,9 +18,9 @@ import numpy as np
 
 import jax
 
-from repro.core import graph as G
 from repro.core.api import SharedMapConfig, shared_map
 from repro.core.hierarchy import Hierarchy
+from repro.core.taskgraph import TaskGraph
 
 
 def _axis_types_kwargs(n_axes: int) -> dict:
@@ -46,8 +46,10 @@ def make_production_mesh(*, multi_pod: bool = False, device_order: str = "defaul
 
 def logical_comm_graph(multi_pod: bool = False,
                        w_model: float = 100.0, w_data: float = 10.0,
-                       w_pod: float = 1.0) -> G.Graph:
-    """Communication graph of one train step between LOGICAL mesh positions.
+                       w_pod: float = 1.0) -> TaskGraph:
+    """Communication graph of one train step between LOGICAL mesh positions,
+    as a workload-layer :class:`TaskGraph` (PR 10 ingestion refactor —
+    ``.to_graph()`` lowers it to the CSR the mapping kernels consume).
 
     Edge weights ~ relative bytes: TP collectives (all-gather/all-reduce
     over `model`) dominate, DP gradient ring over `data` is second, pod-axis
@@ -77,7 +79,10 @@ def logical_comm_graph(multi_pod: bool = False,
     u = np.concatenate(us)
     v = np.concatenate(vs)
     w = np.concatenate(ws)
-    return G.from_edges(k, u, v, w)
+    return TaskGraph.from_edges(
+        k, u, v, w,
+        meta={"source": "logical_mesh", "multi_pod": multi_pod,
+              "weights": {"model": w_model, "data": w_data, "pod": w_pod}})
 
 
 def physical_hierarchy(multi_pod: bool = False) -> Hierarchy:
@@ -101,16 +106,12 @@ def sharedmap_device_order(multi_pod: bool = False, seed: int = 0) -> np.ndarray
     improve on it."""
     from repro.core.mapping import greedy_mapping, map_cost_dense, swap_refine
 
-    g = logical_comm_graph(multi_pod=multi_pod)
+    tg = logical_comm_graph(multi_pod=multi_pod)
     h = physical_hierarchy(multi_pod=multi_pod)
     k = h.k
-    m = int(g.m)
-    rows = np.asarray(g.rows)[:m]
-    cols = np.asarray(g.cols)[:m]
-    w = np.asarray(g.ewgt)[:m]
     C = np.zeros((k, k))
-    np.add.at(C, (rows, cols), w)
-    C = (C + C.T) / 2.0
+    np.add.at(C, (tg.u, tg.v), tg.w.astype(np.float64))
+    np.add.at(C, (tg.v, tg.u), tg.w.astype(np.float64))
     D = h.distance_table()
 
     candidates = [np.arange(k, dtype=np.int64)]           # default order

@@ -113,6 +113,7 @@ from repro.core.multisection import (STRATEGIES, LevelPlanner, PlanGroup,
                                      host_graph_from)
 from repro.core.partition import num_levels
 from repro.core.refine import resolve_backend
+from repro.core.taskgraph import TaskGraph
 from repro.faults import NULL_INJECTOR, FaultInjector, _hash_uniform
 from repro.serve.admission import (ADMIT, ADMIT_DEGRADED, PREEMPT, SHED,
                                    AdmissionController, DeadlineExceededError,
@@ -132,14 +133,25 @@ DEGRADE_FAST_PRESET = 2    # recomputed with the cheapest preset
 DEGRADE_GREEDY = 3         # greedy baseline floor (no multisection)
 
 
-def graph_fingerprint(g: Graph, h: Hierarchy) -> bytes:
+def graph_fingerprint(g: Graph, h: Hierarchy,
+                      tg: TaskGraph | None = None) -> bytes:
     """Content address of the (graph, hierarchy) pair alone — the REAL CSR
     arrays (padding never affects planning) plus the hierarchy vectors.
     Keys the degradation ladder's cached-nearby index: any cached result
-    for the same graph+hierarchy is 'nearby' whatever its config."""
+    for the same graph+hierarchy is 'nearby' whatever its config.
+
+    When the request arrived as a workload-layer :class:`TaskGraph`, its
+    canonical-form ``fingerprint()`` substitutes for hashing the doubled
+    CSR — cheaper, and stable across whatever edge order the producer
+    emitted (PR 10)."""
+    hs = hashlib.blake2b(digest_size=16)
+    if tg is not None:
+        hs.update(b"TG")
+        hs.update(tg.fingerprint())
+        hs.update(repr((tuple(h.a), tuple(h.d))).encode())
+        return hs.digest()
     n = int(g.n)
     m = int(g.m)
-    hs = hashlib.blake2b(digest_size=16)
     for arr in (np.asarray(g.vwgt)[:n], np.asarray(g.rows)[:m],
                 np.asarray(g.cols)[:m], np.asarray(g.ewgt)[:m]):
         a = np.ascontiguousarray(arr)
@@ -149,12 +161,13 @@ def graph_fingerprint(g: Graph, h: Hierarchy) -> bytes:
     return hs.digest()
 
 
-def request_fingerprint(g: Graph, h: Hierarchy, cfg: SharedMapConfig) -> bytes:
+def request_fingerprint(g: Graph, h: Hierarchy, cfg: SharedMapConfig,
+                        tg: TaskGraph | None = None) -> bytes:
     """Content address of a mapping request: the graph fingerprint plus
     every config field that influences the result. ``backend`` enters
     resolved, so auto/xla hit the same entry off-TPU."""
     hs = hashlib.blake2b(digest_size=16)
-    hs.update(graph_fingerprint(g, h))
+    hs.update(graph_fingerprint(g, h, tg))
     hs.update(repr((float(cfg.eps), cfg.preset, cfg.strategy, int(cfg.seed),
                     bool(cfg.adaptive), resolve_backend(cfg.backend),
                     bool(cfg.refine_mapping))).encode())
@@ -359,7 +372,7 @@ class MappingService:
 
     # ------------------------------------------------------------- frontend
 
-    def submit(self, g: Graph, h: Hierarchy,
+    def submit(self, g: Graph | TaskGraph, h: Hierarchy,
                config: SharedMapConfig | None = None, *,
                priority: int = 0, deadline_s: float | None = None,
                on_shed: str = "raise") -> Future:
@@ -379,13 +392,16 @@ class MappingService:
         :class:`ServiceClosedError` after :meth:`close`.
         """
         cfg = config or SharedMapConfig()
+        tg = g if isinstance(g, TaskGraph) else None
+        if tg is not None:
+            g = tg.to_graph()
         if self.validate:
             validate_request(g, h, cfg)
         fut: Future = Future()
         deadline = None
         if deadline_s is not None:
             deadline = time.monotonic() + float(deadline_s)
-        fp = request_fingerprint(g, h, cfg)
+        fp = request_fingerprint(g, h, cfg, tg)
         cached = self._cache_get(fp)
         if cached is not None:
             fut.set_result(self._result_copy(cached, cache_hit=True))
@@ -410,10 +426,10 @@ class MappingService:
                     self.telemetry["inflight_dedup"] += 1
                 return fut
             return self._admit_new(g, h, cfg, fp, fut, priority, deadline,
-                                   on_shed)
+                                   on_shed, tg=tg)
 
     def _admit_new(self, g, h, cfg, fp, fut, priority, deadline,
-                   on_shed) -> Future:
+                   on_shed, tg=None) -> Future:
         """Admission decision for a non-cached, non-dedup request. Caller
         holds ``_cv``."""
         adm = self.admission
@@ -439,7 +455,7 @@ class MappingService:
         if decision == SHED:
             if self.degrade_on_overload:
                 return self._serve_inline_degraded(g, h, cfg, fut,
-                                                  reason="overload")
+                                                  reason="overload", tg=tg)
             adm.note_shed()
             safe_emit(self.tracker.count, "service.shed")
             safe_emit(self.tracker.event, "shed", reason="queue_full",
@@ -458,7 +474,7 @@ class MappingService:
             # request is served with the cheapest preset, cached under the
             # DEGRADED config's fingerprint (never the original's).
             cfg = dataclasses.replace(cfg, preset="fast")
-            fp = request_fingerprint(g, h, cfg)
+            fp = request_fingerprint(g, h, cfg, tg)
             degradation = {"level": DEGRADE_FAST_PRESET,
                            "mode": "fast_preset", "reason": "overload"}
             adm.note_degraded()
@@ -476,7 +492,7 @@ class MappingService:
                 return fut
         self._seq += 1
         req = _Request(g=g, h=h, cfg=cfg, fp=fp,
-                       gfp=graph_fingerprint(g, h), futures=[fut],
+                       gfp=graph_fingerprint(g, h, tg), futures=[fut],
                        priority=priority, deadline=deadline, seq=self._seq,
                        degradation=degradation)
         self._pending[fp] = req
@@ -512,7 +528,7 @@ class MappingService:
                     futs.append(f)
         return futs
 
-    def map(self, g: Graph, h: Hierarchy,
+    def map(self, g: Graph | TaskGraph, h: Hierarchy,
             config: SharedMapConfig | None = None, *,
             priority: int = 0,
             deadline_s: float | None = None) -> SharedMapResult:
@@ -649,6 +665,23 @@ class MappingService:
             snap["store"] = self.store.stats()
         if self.supervisor is not None:
             snap["workers"] = self.supervisor.stats()
+        # aggregation sinks (e.g. CounterTracker) also get the level-style
+        # instruments counters can't carry, and their aggregated view rides
+        # along in the snapshot — probed with getattr so plain count/event
+        # sinks stay valid.
+        gauge = getattr(self.tracker, "gauge", None)
+        if callable(gauge):
+            adm = snap["admission"]
+            safe_emit(gauge, "service.queue_depth", adm["queued"])
+            safe_emit(gauge, "service.inflight", adm["inflight"])
+            safe_emit(gauge, "service.cache_entries",
+                      snap["result_cache"]["entries"])
+        tsnap = getattr(self.tracker, "snapshot", None)
+        if callable(tsnap):
+            try:
+                snap["tracker"] = tsnap()
+            except Exception:
+                pass
         return snap
 
     # ------------------------------------------------------------ scheduler
@@ -1128,14 +1161,14 @@ class MappingService:
         self._resolve(req, res, cache=False)
 
     def _serve_inline_degraded(self, g, h, cfg, fut: Future,
-                               reason: str) -> Future:
+                               reason: str, tg=None) -> Future:
         """Hard-overload degradation, answered in the caller's thread (no
         queue slot consumed): cached-nearby if available, else the greedy
         floor — both cost microseconds. Caller holds ``_cv``."""
         adm = self.admission
         adm.note_degraded()
         self._count_fault("degraded")
-        res = self._nearby_cached(graph_fingerprint(g, h))
+        res = self._nearby_cached(graph_fingerprint(g, h, tg))
         if res is not None:
             level, mode = DEGRADE_CACHED_NEARBY, "cached_nearby"
         else:

@@ -14,6 +14,11 @@ point of view (a broken sink must never take down the serving path):
 * ``event(name, **fields)`` — discrete structured occurrences (a request
   shed with its queue depth, a retry with its backoff).
 
+Sinks MAY additionally expose ``gauge(name, value, **tags)`` (last-value
+instruments: queue depth, cache entries) and ``snapshot()``; the service
+probes for them with ``getattr`` so plain two-verb sinks keep working
+(see :class:`CounterTracker`).
+
 The service guards every emit with :func:`safe_emit`, so sinks may raise
 freely (see tests). Modeled on levanter's ``Tracker`` (ROADMAP pointer)
 but scoped to what the serving path needs today.
@@ -157,6 +162,101 @@ class JsonlTracker(Tracker):
                 self._f.close()
                 self._f = None
         _LIVE_JSONL.discard(self)
+
+
+def _render_key(name: str, tags: tuple) -> str:
+    if not tags:
+        return name
+    return name + "{" + ",".join(f"{k}={v}" for k, v in tags) + "}"
+
+
+def _prom_name(name: str) -> str:
+    """Prometheus metric names allow ``[a-zA-Z_:][a-zA-Z0-9_:]*``."""
+    out = "".join(c if c.isalnum() or c in "_:" else "_" for c in name)
+    return "_" + out if out[:1].isdigit() else (out or "_")
+
+
+class CounterTracker(Tracker):
+    """Prometheus-style aggregation sink (PR 10 satellite).
+
+    Unlike :class:`InMemoryTracker` (a test spy keeping raw event dicts),
+    this keeps only the AGGREGATED state an operator scrapes: monotonic
+    counters and last-value gauges, keyed by ``(name, sorted tags)``.
+    ``event`` emits are folded in rather than stored: each becomes a
+    ``events_total{name=...}`` counter bump plus one gauge per numeric
+    field (``event.<name>.<field>``) — so an unbounded event stream costs
+    bounded memory.
+
+    ``snapshot()`` returns plain dicts (what ``MappingService.stats()``
+    embeds under ``"tracker"``); ``to_textfile()`` renders the Prometheus
+    text exposition format and ``write_textfile(path)`` publishes it
+    atomically for the node-exporter textfile collector.
+    """
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._counters: dict[tuple[str, tuple], float] = {}
+        self._gauges: dict[tuple[str, tuple], float] = {}
+
+    @staticmethod
+    def _key(name: str, tags: dict) -> tuple[str, tuple]:
+        return name, tuple(sorted((k, str(v)) for k, v in tags.items()))
+
+    def count(self, name: str, value: int = 1, **tags) -> None:
+        key = self._key(name, tags)
+        with self._lock:
+            self._counters[key] = self._counters.get(key, 0.0) + value
+
+    def gauge(self, name: str, value: float, **tags) -> None:
+        with self._lock:
+            self._gauges[self._key(name, tags)] = float(value)
+
+    def event(self, name: str, **fields) -> None:
+        numeric = {k: v for k, v in fields.items()
+                   if isinstance(v, (int, float)) and not isinstance(v, bool)}
+        key = self._key("events_total", {"name": name})
+        with self._lock:
+            self._counters[key] = self._counters.get(key, 0.0) + 1
+            for k, v in numeric.items():
+                self._gauges[(f"event.{name}.{k}", ())] = float(v)
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return {
+                "counters": {_render_key(n, t): v
+                             for (n, t), v in sorted(self._counters.items())},
+                "gauges": {_render_key(n, t): v
+                           for (n, t), v in sorted(self._gauges.items())},
+            }
+
+    def to_textfile(self) -> str:
+        """Prometheus text exposition of the current state."""
+        with self._lock:
+            counters = sorted(self._counters.items())
+            gauges = sorted(self._gauges.items())
+        lines = []
+        for kind, items in (("counter", counters), ("gauge", gauges)):
+            seen = set()
+            for (name, tags), val in items:
+                pname = _prom_name(name)
+                if pname not in seen:
+                    seen.add(pname)
+                    lines.append(f"# TYPE {pname} {kind}")
+                label = ""
+                if tags:
+                    label = "{" + ",".join(
+                        f'{_prom_name(k)}="{v}"' for k, v in tags) + "}"
+                lines.append(f"{pname}{label} {val}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def write_textfile(self, path: str) -> None:
+        """Atomic publish (tmp + rename): a scraper never reads a torn
+        file."""
+        import os
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            f.write(self.to_textfile())
+        os.replace(tmp, path)
 
 
 class CompositeTracker(Tracker):

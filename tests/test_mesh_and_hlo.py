@@ -14,18 +14,25 @@ from repro.launch.mesh import logical_comm_graph, physical_hierarchy
 
 
 def test_logical_comm_graph_shapes():
-    g1 = logical_comm_graph(False)
-    g2 = logical_comm_graph(True)
-    assert int(g1.n) == 256 and int(g2.n) == 512
+    # logical_comm_graph now returns a workload-layer TaskGraph (PR 10)
+    tg1 = logical_comm_graph(False)
+    tg2 = logical_comm_graph(True)
+    assert tg1.n == 256 and tg2.n == 512
+    assert tg1.meta["source"] == "logical_mesh"
     # multi-pod graph has pod-crossing edges
-    assert float(g2.ewgt.sum()) > float(g1.ewgt.sum())
+    assert float(tg2.w.sum()) > float(tg1.w.sum())
+    # lowering to CSR doubles the undirected edge weight mass
+    g1 = tg1.to_graph()
+    assert int(g1.n) == 256
+    assert float(np.asarray(g1.ewgt)[:int(g1.m)].sum()) == \
+        pytest.approx(2 * float(tg1.w.sum()))
 
 
 def test_sharedmap_order_improves_over_random():
     """The integration claim: SharedMap's device order has J <= a random
     permutation's J on the physical hierarchy."""
     from repro.launch.mesh import sharedmap_device_order
-    g = logical_comm_graph(False)
+    g = logical_comm_graph(False).to_graph()
     h = physical_hierarchy(False)
     perm = sharedmap_device_order(False)
     assert sorted(perm.tolist()) == list(range(256))  # a bijection

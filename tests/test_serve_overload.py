@@ -495,6 +495,55 @@ def test_jsonl_tracker_records_service_history(tmp_path, graphs):
         tr.count("after.close")
 
 
+def test_counter_tracker_aggregates_service_counters(graphs):
+    from repro.serve.tracker import CounterTracker
+    tr = CounterTracker()
+    svc = MappingService(tracker=tr)
+    try:
+        svc.map(graphs[0], H, SharedMapConfig(preset="fast", seed=22))
+        svc.map(graphs[0], H, SharedMapConfig(preset="fast", seed=22))
+        snap = svc.stats()
+    finally:
+        svc.close()
+    # service telemetry flows into the aggregated snapshot...
+    counters = snap["tracker"]["counters"]
+    assert counters["service.admitted"] == 1
+    assert counters["service.cache.miss"] == 1
+    assert counters["service.cache.hit"] == 1
+    # ...and stats() publishes level-style gauges through the sink
+    gauges = snap["tracker"]["gauges"]
+    assert gauges["service.queue_depth"] == 0
+    assert gauges["service.cache_entries"] == 1
+
+
+def test_counter_tracker_semantics_and_textfile(tmp_path):
+    from repro.serve.tracker import CounterTracker
+    tr = CounterTracker()
+    tr.count("reqs", 2, route="a")
+    tr.count("reqs", 3, route="a")
+    tr.count("reqs", route="b")
+    tr.gauge("depth", 7)
+    tr.gauge("depth", 4)          # gauges keep the LAST value
+    tr.event("shed", queued=9, reason="full", ok=True)  # str/bool skipped
+    snap = tr.snapshot()
+    assert snap["counters"]["reqs{route=a}"] == 5
+    assert snap["counters"]["reqs{route=b}"] == 1
+    assert snap["counters"]["events_total{name=shed}"] == 1
+    assert snap["gauges"]["depth"] == 4
+    assert snap["gauges"]["event.shed.queued"] == 9
+    assert "event.shed.reason" not in snap["gauges"]
+    txt = tr.to_textfile()
+    assert "# TYPE reqs counter" in txt
+    assert 'reqs{route="a"} 5' in txt
+    assert "# TYPE depth gauge" in txt and "\ndepth 4" in txt
+    # dots sanitize to Prometheus-legal names
+    assert "event_shed_queued 9" in txt
+    path = tmp_path / "metrics.prom"
+    tr.write_textfile(str(path))
+    assert path.read_text() == txt
+    assert not list(tmp_path.glob("*.tmp.*"))  # atomic publish, no litter
+
+
 def test_raising_tracker_never_breaks_serving(graphs):
     class BadSink(Tracker):
         def count(self, name, value=1, **tags):
